@@ -1,0 +1,51 @@
+"""Shared benchmark plumbing: sized-down experimental grid + CSV output.
+
+Every benchmark mirrors one paper table/figure at simulation scale
+(synthetic non-IID data — the repro gate; see DESIGN.md §8.1).  Claims are
+validated as ORDERINGS/DIRECTIONS, not absolute CIFAR numbers.
+"""
+from __future__ import annotations
+
+import json
+import time
+from pathlib import Path
+
+from repro.fl.simulator import SimConfig, run_experiment
+
+ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
+
+# Paper protocol scaled to 1 CPU core: 16 clients (paper: 100), 30 rounds
+# (paper: 500), 4 neighbors (paper: 10), small CNN (paper: ResNet-18-GN).
+BASE = dict(m=16, n_neighbors=4, sample_ratio=0.25, rounds=30, batch=16,
+            k_local=2, k_personal=1, n_train=64, n_test=32, image_size=8,
+            lr=0.1)
+
+DIR_03 = dict(dist="dirichlet", alpha=0.3)
+DIR_01 = dict(dist="dirichlet", alpha=0.1)
+PAT_2 = dict(dist="pathological", c=2)
+
+
+def sim(**kw):
+    cfg = dict(BASE)
+    cfg.update(kw)
+    return SimConfig(**cfg)
+
+
+def run(algo, simcfg, **kw):
+    t0 = time.time()
+    h = run_experiment(algo, simcfg, eval_every=5, **kw)
+    h["wall_s"] = round(time.time() - t0, 1)
+    return h
+
+
+def save_rows(name: str, rows: list[dict]):
+    ARTIFACTS.mkdir(parents=True, exist_ok=True)
+    (ARTIFACTS / f"{name}.json").write_text(json.dumps(rows, indent=1))
+
+
+def emit(name: str, rows: list[dict], cols: list[str]):
+    save_rows(name, rows)
+    print(f"\n== {name} ==")
+    print(",".join(cols))
+    for r in rows:
+        print(",".join(str(r.get(c, "")) for c in cols))

@@ -1,0 +1,69 @@
+"""Emit the EXPERIMENTS.md §Dry-run and §Roofline markdown tables from the
+dry-run artifacts.  PYTHONPATH=src python -m benchmarks.report > tables.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from . import roofline
+
+DRYRUN = Path(__file__).resolve().parent / "artifacts" / "dryrun"
+
+
+def fmt_bytes(b):
+    for unit, s in ((2**40, "TiB"), (2**30, "GiB"), (2**20, "MiB")):
+        if b >= unit:
+            return f"{b / unit:.2f}{s}"
+    return f"{b}B"
+
+
+def dryrun_table(mesh: str, gossip: str = "matrix"):
+    print(f"\n### Dry-run — {mesh}-pod mesh "
+          f"({'(2,16,16)=512' if mesh == 'multi' else '(16,16)=256'} chips), "
+          f"gossip={gossip}\n")
+    print("| arch | shape | layout m×TP | compile | args/dev | temp/dev | "
+          "HLO flops/dev | collective bytes/dev (top op) |")
+    print("|---|---|---|---|---|---|---|---|")
+    for f in sorted(DRYRUN.glob(f"*__{mesh}__{gossip}.json")):
+        r = json.loads(f.read_text())
+        if r.get("status") == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | — | — | — | — | — | "
+                  f"skipped: sub-quadratic-only shape |")
+            continue
+        lo = r["layout"]
+        ma = r.get("memory_analysis", {})
+        colls = r.get("collectives", {})
+        total = sum(v["bytes"] for v in colls.values())
+        top = max(colls.items(), key=lambda kv: kv[1]["bytes"])[0] \
+            if colls else "-"
+        tp = "x".join(lo["tp_axes"]) + ("+fsdp" if lo["fsdp_axes"] else "")
+        print(f"| {r['arch']} | {r['shape']} | {lo['n_clients']}×{tp} "
+              f"| {r['compile_s']}s "
+              f"| {fmt_bytes(ma.get('argument_size_in_bytes', 0))} "
+              f"| {fmt_bytes(ma.get('temp_size_in_bytes', 0))} "
+              f"| {r['cost_analysis'].get('flops', 0):.2e} "
+              f"| {fmt_bytes(total)} ({top}) |")
+
+
+def roofline_table(mesh: str, gossip: str = "matrix"):
+    rows = roofline.load_all(mesh, gossip)
+    if not rows:
+        return
+    print(f"\n### Roofline — {mesh}-pod, gossip={gossip}\n")
+    print("| arch | shape | compute | memory | collective | dominant | "
+          "MODEL_FLOPS/HLO | params/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {roofline.fmt_s(r['t_compute_s'])} "
+              f"| {roofline.fmt_s(r['t_memory_s'])} "
+              f"| {roofline.fmt_s(r['t_collective_s'])} | **{r['dominant']}** "
+              f"| {r['useful_ratio']:.2f} "
+              f"| {r['param_bytes_per_dev_GB']:.2f}GB |")
+
+
+if __name__ == "__main__":
+    for mesh in ("single", "multi"):
+        dryrun_table(mesh)
+    for mesh in ("single", "multi"):
+        roofline_table(mesh)

@@ -1,0 +1,51 @@
+"""Benchmark harness entrypoint — one experiment per paper table/figure.
+
+  E1/E2  bench_accuracy    paper Tables 1+2 (+ Tiny-ImageNet Tables 6+7)
+  E3     bench_hetero      paper Table 3
+  E4     bench_ablation    paper Table 4
+  E5     bench_neighbors   paper Figure 3
+  E6     bench_topology    Remark 2 / Lemma 3 (connectivity; beyond-paper)
+  R1     roofline          three-term roofline from the dry-run artifacts
+
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only E1,E4]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny grid for CI smoke")
+    ap.add_argument("--only", default="",
+                    help="comma list: E1,E3,E4,E5,R1")
+    args = ap.parse_args(argv)
+    only = set(args.only.split(",")) if args.only else None
+
+    from . import (bench_ablation, bench_accuracy, bench_hetero,
+                   bench_neighbors, bench_topology, roofline)
+
+    suites = [("E1", bench_accuracy), ("E3", bench_hetero),
+              ("E4", bench_ablation), ("E5", bench_neighbors),
+              ("E6", bench_topology), ("R1", roofline)]
+    t0 = time.time()
+    failures = 0
+    for tag, mod in suites:
+        if only and tag not in only:
+            continue
+        print(f"\n#### {tag}: {mod.__name__} "
+              f"({time.time() - t0:.0f}s elapsed)", flush=True)
+        try:
+            mod.main(quick=args.quick)
+        except Exception as e:  # report, keep going
+            failures += 1
+            print(f"[{tag}] FAILED: {type(e).__name__}: {e}")
+    print(f"\n#### done in {time.time() - t0:.0f}s, failures={failures}")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

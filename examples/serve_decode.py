@@ -1,0 +1,66 @@
+"""Serving demo: batched autoregressive decode with per-client
+personalized models (the decode_32k shape at smoke scale).
+
+Each of 2 clients serves its OWN personalized model (the paper's product);
+requests are batched per client, one token per step against a KV cache /
+recurrent state.  Works for every assigned architecture family.
+
+  PYTHONPATH=src python examples/serve_decode.py [--arch h2o-danube-1.8b]
+"""
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_reduced
+from repro.models import get_model, encdec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--tokens", type=int, default=16)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--clients", type=int, default=2)
+    args = ap.parse_args(argv)
+
+    cfg = get_reduced(args.arch)
+    api = get_model(cfg)
+    m, B = args.clients, args.batch
+    params = jax.vmap(lambda k: api.init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), m))
+    cache = jax.vmap(lambda _: api.init_cache(cfg, B, 64))(jnp.arange(m))
+    if cfg.family == "encdec":
+        frames = jnp.zeros((m, B, cfg.n_frames, cfg.d_model))
+        cache = jax.vmap(lambda p, f, c: encdec.prefill_cross(p, f, cfg, c)
+                         )(params, frames, cache)
+
+    @jax.jit
+    def serve_step(params, cache, toks, pos):
+        return jax.vmap(lambda p, c, t: api.decode_step(p, c, t, pos, cfg)
+                        )(params, cache, toks)
+
+    toks = jnp.zeros((m, B, 1), jnp.int32)
+    out = []
+    t0 = time.time()
+    for t in range(args.tokens):
+        logits, cache = serve_step(params, cache, toks, jnp.int32(t))
+        toks = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(toks[..., 0])
+    dt = time.time() - t0
+    seqs = jnp.stack(out, -1)   # (m, B, T)
+    print(f"[serve] {cfg.arch_id}: {m} personalized models x {B} requests, "
+          f"{args.tokens} tokens in {dt:.1f}s "
+          f"({m * B * args.tokens / dt:.0f} tok/s incl. compile)")
+    print("[serve] greedy continuations (client 0):")
+    for b in range(B):
+        print("   req", b, seqs[0, b].tolist())
+
+
+if __name__ == "__main__":
+    main()

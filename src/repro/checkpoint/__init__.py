@@ -1,0 +1,3 @@
+from .checkpoint import save_pytree, load_pytree, save_train_state, restore_train_state
+
+__all__ = ["save_pytree", "load_pytree", "save_train_state", "restore_train_state"]

@@ -1,0 +1,85 @@
+"""Pytree checkpointing: npz with path-flattened keys + structure manifest.
+
+Handles nested dicts/lists/tuples/NamedTuples of arrays.  Restore takes a
+template pytree (same structure, any values) so no pickle is involved.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(p, "key", getattr(p, "idx", getattr(p, "name", p))))
+            for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype == jnp.bfloat16:
+            # npz has no bf16: store the raw bits; load_pytree views them
+            # back through the template's dtype.
+            arr = arr.view(np.uint16)
+        out[key] = arr
+    return out
+
+
+def save_pytree(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays = _flatten(tree)
+    np.savez(path, **arrays)
+    if metadata is not None:
+        with open(path + ".meta.json", "w") as f:
+            json.dump(metadata, f, indent=2)
+
+
+def load_pytree(path: str, template: Any) -> Any:
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    data = np.load(path)
+    flat = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat[0]:
+        key = "/".join(
+            str(getattr(q, "key", getattr(q, "idx", getattr(q, "name", q))))
+            for q in p)
+        raw = data[key]
+        if leaf.dtype == jnp.bfloat16 and raw.dtype == np.uint16:
+            raw = raw.view(jnp.bfloat16)
+        elif raw.dtype.kind == "V":  # legacy bf16 saved as void bits
+            raw = raw.view(jnp.bfloat16)
+        arr = jnp.asarray(raw)
+        assert arr.shape == leaf.shape, f"{key}: {arr.shape} != {leaf.shape}"
+        leaves.append(arr.astype(leaf.dtype))
+    return jax.tree.unflatten(flat[1], leaves)
+
+
+def save_train_state(ckpt_dir: str, step: int, state: Any,
+                     keep: int = 3) -> str:
+    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+    save_pytree(path, state, metadata={"step": step})
+    # prune old checkpoints
+    ckpts = sorted(f for f in os.listdir(ckpt_dir)
+                   if f.startswith("step_") and f.endswith(".npz"))
+    for old in ckpts[:-keep]:
+        os.remove(os.path.join(ckpt_dir, old))
+        meta = os.path.join(ckpt_dir, old[:-4] + ".meta.json")
+        if os.path.exists(meta):
+            os.remove(meta)
+    return path
+
+
+def restore_train_state(ckpt_dir: str, template: Any):
+    ckpts = sorted(f for f in os.listdir(ckpt_dir)
+                   if f.startswith("step_") and f.endswith(".npz"))
+    if not ckpts:
+        return None, 0
+    latest = ckpts[-1]
+    step = int(latest[len("step_"):-len(".npz")])
+    return load_pytree(os.path.join(ckpt_dir, latest), template), step

@@ -1,0 +1,50 @@
+"""Architecture config registry: --arch <id> -> ModelConfig."""
+from __future__ import annotations
+
+import importlib
+
+from repro.models.config import ModelConfig
+from .shapes import SHAPES, InputShape
+
+_MODULES = {
+    "deepseek-moe-16b": "deepseek_moe_16b",
+    "recurrentgemma-9b": "recurrentgemma_9b",
+    "xlstm-125m": "xlstm_125m",
+    "whisper-large-v3": "whisper_large_v3",
+    "codeqwen1.5-7b": "codeqwen1_5_7b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "granite-3-2b": "granite_3_2b",
+    "qwen2-vl-7b": "qwen2_vl_7b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+# archs allowed to run the long_500k decode shape (sub-quadratic / windowed);
+# see DESIGN.md §4 for the skip rationale on the full-attention archs.
+LONG_CONTEXT_ARCHS = ("recurrentgemma-9b", "xlstm-125m", "h2o-danube-1.8b")
+
+
+def _module(arch_id: str):
+    if arch_id not in _MODULES:
+        raise KeyError(f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch_id]}")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    return _module(arch_id).CONFIG
+
+
+def get_reduced(arch_id: str) -> ModelConfig:
+    return _module(arch_id).reduced()
+
+
+def shape_applicable(arch_id: str, shape_name: str) -> bool:
+    if shape_name == "long_500k":
+        return arch_id in LONG_CONTEXT_ARCHS
+    return True
+
+
+__all__ = ["ARCH_IDS", "SHAPES", "InputShape", "LONG_CONTEXT_ARCHS",
+           "get_config", "get_reduced", "shape_applicable"]

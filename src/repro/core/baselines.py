@@ -1,0 +1,439 @@
+"""Every baseline the paper compares against (Table 1), on one round engine.
+
+CFL methods (FedAvg, FedPer, FedRep, FedBABU, Ditto): a virtual server
+averages over a sampled client subset (ratio 0.1 in the paper).  Implemented
+as masked means over the stacked client axis — numerically identical to a
+real server.
+
+DFL methods (DFedAvgM, OSGP, Dis-PFL, DFedAvgM-P): gossip over the round's
+mixing matrix.  OSGP is directed push-sum on the FULL model (= DFedPGP
+without partial personalization); DFedAvgM-P is the ablation row of Table 4.
+
+Every algorithm exposes: init(stacked_params) -> state;
+round_fn(state, key_or_P, batches, step_gate=None) -> (state, metrics);
+eval_params(state) -> stacked personalized models.  `step_gate` (m, K) in
+{0,1} gates local steps per client (computation heterogeneity, Table 3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import SGD, SGDState
+from . import local, partition
+
+
+class SimpleState(NamedTuple):
+    params: Any
+    opt: SGDState
+    round: jnp.ndarray
+    extra: Any = None
+
+
+def _lr(decay, rnd):
+    return decay ** rnd.astype(jnp.float32)
+
+
+def _gate(step_gate, batches):
+    if step_gate is not None:
+        return step_gate
+    shp = jax.tree.leaves(batches)[0].shape[:2]   # (m, K)
+    return jnp.ones(shp, jnp.float32)
+
+
+def _mean_sampled(stacked, sampled):
+    """Weighted mean over clients with indicator `sampled` (m,)."""
+    w = sampled / jnp.maximum(jnp.sum(sampled), 1.0)
+
+    def mean_leaf(a):
+        return jnp.einsum("m,m...->...", w.astype(a.dtype), a)
+
+    return jax.tree.map(mean_leaf, stacked)
+
+
+def _bcast(tree, m):
+    return jax.tree.map(lambda a: jnp.broadcast_to(a, (m,) + a.shape), tree)
+
+
+def _select(cond_vec, a, b):
+    """Per-client select: cond ? a_i : b_i."""
+    def sel(x, y):
+        c = cond_vec.reshape((-1,) + (1,) * (x.ndim - 1)).astype(x.dtype)
+        return c * x + (1 - c) * y
+    return jax.tree.map(sel, a, b)
+
+
+def _sample(key, m, ratio):
+    n_s = max(int(ratio * m), 1)
+    return jnp.zeros((m,)).at[jax.random.permutation(key, m)[:n_s]].set(1.0)
+
+
+def _mix(P, stacked):
+    return jax.tree.map(
+        lambda a: jnp.einsum("mn,n...->m...", P.astype(a.dtype), a), stacked)
+
+
+# ---------------------------------------------------------------------------
+# Local — no communication
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LocalOnly:
+    loss_fn: Callable
+    opt: SGD = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    lr_decay: float = 0.99
+
+    def init(self, stacked):
+        return SimpleState(stacked, self.opt.init(stacked), jnp.zeros((), jnp.int32))
+
+    def round_fn(self, state, _unused, batches, step_gate=None):
+        lr = _lr(self.lr_decay, state.round)
+        gate = _gate(step_gate, batches)
+        fn = lambda p, s, b, g: local.sgd_steps(
+            self.loss_fn, self.opt, p, s, b, lr, step_gate=g)
+        params, opt, loss = jax.vmap(fn)(state.params, state.opt, batches, gate)
+        return SimpleState(params, opt, state.round + 1), {"loss": jnp.mean(loss)}
+
+    def eval_params(self, state):
+        return state.params
+
+
+# ---------------------------------------------------------------------------
+# FedAvg — full-model server averaging over sampled clients
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FedAvg:
+    loss_fn: Callable
+    sample_ratio: float = 0.1
+    opt: SGD = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    lr_decay: float = 0.99
+
+    def init(self, stacked):
+        glob = jax.tree.map(lambda a: a[0], stacked)
+        return SimpleState(stacked, self.opt.init(stacked),
+                           jnp.zeros((), jnp.int32), extra=glob)
+
+    def round_fn(self, state, key, batches, step_gate=None):
+        m = jax.tree.leaves(state.params)[0].shape[0]
+        sampled = _sample(key, m, self.sample_ratio)
+        lr = _lr(self.lr_decay, state.round)
+        gate = _gate(step_gate, batches)
+
+        start = _bcast(state.extra, m)
+        params, opt, loss = jax.vmap(
+            lambda p, s, b, g: local.sgd_steps(
+                self.loss_fn, self.opt, p, s, b, lr, step_gate=g)
+        )(start, state.opt, batches, gate)
+
+        params = _select(sampled, params, state.params)
+        opt = SGDState(_select(sampled, opt.momentum, state.opt.momentum))
+        glob = _mean_sampled(params, sampled)
+        return SimpleState(params, opt, state.round + 1, extra=glob), {
+            "loss": jnp.sum(loss * sampled) / jnp.maximum(jnp.sum(sampled), 1)}
+
+    def eval_params(self, state):
+        return state.params
+
+
+# ---------------------------------------------------------------------------
+# FedPer / FedRep / FedBABU — partial personalization with a server
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FedPartial:
+    """mode='per'  : joint update of u and v each step (FedPer).
+    mode='rep'  : head steps first (body fixed), then body steps (head fixed).
+    mode='babu' : only u trained, v frozen at init (FedBABU; fine-tune at eval
+    is provided by `finetune`)."""
+    loss_fn: Callable
+    mask: Any
+    mode: str = "per"
+    sample_ratio: float = 0.1
+    k_head: int = 2
+    opt: SGD = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    lr_decay: float = 0.99
+
+    def init(self, stacked):
+        glob_u = partition.split(jax.tree.map(lambda a: a[0], stacked),
+                                 self.mask)[0]
+        return SimpleState(stacked, self.opt.init(stacked),
+                           jnp.zeros((), jnp.int32), extra=glob_u)
+
+    def _local(self, params, opt, batches, lr, gate):
+        if self.mode == "per":
+            return local.sgd_steps(self.loss_fn, self.opt, params, opt,
+                                   batches, lr, step_gate=gate)
+        if self.mode == "babu":
+            return local.sgd_steps(
+                self.loss_fn, self.opt, params, opt, batches, lr,
+                step_gate=gate,
+                grad_filter=lambda g, p: local.masked_grads(g, self.mask, True))
+        # FedRep: head steps on the first k_head batch slices, then body
+        bh = jax.tree.map(lambda a: a[:self.k_head], batches)
+        bb = jax.tree.map(lambda a: a[self.k_head:], batches)
+        params, opt, l1 = local.sgd_steps(
+            self.loss_fn, self.opt, params, opt, bh, lr,
+            step_gate=gate[:self.k_head],
+            grad_filter=lambda g, p: local.masked_grads(g, self.mask, False))
+        params, opt, l2 = local.sgd_steps(
+            self.loss_fn, self.opt, params, opt, bb, lr,
+            step_gate=gate[self.k_head:],
+            grad_filter=lambda g, p: local.masked_grads(g, self.mask, True))
+        return params, opt, 0.5 * (l1 + l2)
+
+    def round_fn(self, state, key, batches, step_gate=None):
+        m = jax.tree.leaves(state.params)[0].shape[0]
+        sampled = _sample(key, m, self.sample_ratio)
+        lr = _lr(self.lr_decay, state.round)
+        gate = _gate(step_gate, batches)
+
+        # pull the global shared part; keep the personal part local
+        glob_u = _bcast(state.extra, m)
+        merged = partition.merge(glob_u,
+                                 partition.split(state.params, self.mask)[1])
+        params, opt, loss = jax.vmap(
+            lambda p, s, b, g: self._local(p, s, b, lr, g)
+        )(merged, state.opt, batches, gate)
+
+        params = _select(sampled, params, state.params)
+        opt = SGDState(_select(sampled, opt.momentum, state.opt.momentum))
+        glob_u_new = partition.split(_mean_sampled(params, sampled),
+                                     self.mask)[0]
+        st = SimpleState(params, opt, state.round + 1, extra=glob_u_new)
+        return st, {"loss": jnp.sum(loss * sampled) / jnp.maximum(jnp.sum(sampled), 1)}
+
+    def finetune(self, state, batches, steps: int = 5):
+        """FedBABU eval-time fine-tune of the whole model."""
+        lr = _lr(self.lr_decay, state.round)
+        b = jax.tree.map(lambda a: a[:, :steps], batches)
+        gate = _gate(None, b)
+        params, _, _ = jax.vmap(
+            lambda p, s, bb, g: local.sgd_steps(
+                self.loss_fn, self.opt, p, s, bb, lr, step_gate=g)
+        )(state.params, state.opt, b, gate)
+        return params
+
+    def eval_params(self, state):
+        return state.params
+
+
+# ---------------------------------------------------------------------------
+# Ditto — global FedAvg model + proximal personal models
+# ---------------------------------------------------------------------------
+class DittoState(NamedTuple):
+    personal: Any
+    glob_stacked: Any
+    opt_p: SGDState
+    opt_g: SGDState
+    glob: Any
+    round: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class Ditto:
+    loss_fn: Callable
+    lam: float = 0.75
+    sample_ratio: float = 0.1
+    opt: SGD = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    lr_decay: float = 0.99
+
+    def init(self, stacked):
+        glob = jax.tree.map(lambda a: a[0], stacked)
+        return DittoState(stacked, stacked, self.opt.init(stacked),
+                          self.opt.init(stacked), glob,
+                          jnp.zeros((), jnp.int32))
+
+    def round_fn(self, state, key, batches, step_gate=None):
+        m = jax.tree.leaves(state.personal)[0].shape[0]
+        sampled = _sample(key, m, self.sample_ratio)
+        lr = _lr(self.lr_decay, state.round)
+        gate = _gate(step_gate, batches)
+        glob_b = _bcast(state.glob, m)
+
+        # global-model local training (plain empirical risk)
+        gp, og, _ = jax.vmap(
+            lambda p, s, b, g: local.sgd_steps(
+                self.loss_fn, self.opt, p, s, b, lr, step_gate=g)
+        )(glob_b, state.opt_g, batches, gate)
+        gp = _select(sampled, gp, state.glob_stacked)
+        og = SGDState(_select(sampled, og.momentum, state.opt_g.momentum))
+        glob = _mean_sampled(gp, sampled)
+
+        # personal training with proximal pull toward the (old) global model
+        def prox_loss(p, batch, ref):
+            sq = jax.tree.map(lambda a, b: jnp.sum(jnp.square(a - b)), p, ref)
+            return self.loss_fn(p, batch) + 0.5 * self.lam * sum(
+                jax.tree.leaves(sq))
+
+        pp, op, pl = jax.vmap(
+            lambda p, s, b, r, g: local.sgd_steps(
+                prox_loss, self.opt, p, s, b, lr, step_gate=g, extra=r)
+        )(state.personal, state.opt_p, batches, glob_b, gate)
+        pp = _select(sampled, pp, state.personal)
+        op = SGDState(_select(sampled, op.momentum, state.opt_p.momentum))
+
+        st = DittoState(pp, gp, op, og, glob, state.round + 1)
+        return st, {"loss": jnp.sum(pl * sampled) / jnp.maximum(jnp.sum(sampled), 1)}
+
+    def eval_params(self, state):
+        return state.personal
+
+
+# ---------------------------------------------------------------------------
+# DFedAvgM (undirected gossip + momentum) and its partial ablation (-P)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class DFedAvgM:
+    loss_fn: Callable
+    partial_mask: Any = None      # None = full model gossip; mask = "-P" row
+    opt: SGD = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    lr_decay: float = 0.99
+
+    def init(self, stacked):
+        return SimpleState(stacked, self.opt.init(stacked),
+                           jnp.zeros((), jnp.int32))
+
+    def round_fn(self, state, P, batches, step_gate=None):
+        lr = _lr(self.lr_decay, state.round)
+        gate = _gate(step_gate, batches)
+        params, opt, loss = jax.vmap(
+            lambda p, s, b, g: local.sgd_steps(
+                self.loss_fn, self.opt, p, s, b, lr, step_gate=g)
+        )(state.params, state.opt, batches, gate)
+
+        if self.partial_mask is None:
+            params = _mix(P, params)
+        else:
+            params = jax.tree.map(
+                lambda a, mk: jnp.einsum("mn,n...->m...", P.astype(a.dtype), a)
+                if mk else a, params, self.partial_mask)
+        return SimpleState(params, opt, state.round + 1), {"loss": jnp.mean(loss)}
+
+    def eval_params(self, state):
+        return state.params
+
+
+# ---------------------------------------------------------------------------
+# OSGP — directed push-sum gossip of the FULL model
+# ---------------------------------------------------------------------------
+class OSGPState(NamedTuple):
+    params: Any
+    mu: jnp.ndarray
+    opt: SGDState
+    round: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class OSGP:
+    loss_fn: Callable
+    opt: SGD = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    lr_decay: float = 0.99
+
+    def init(self, stacked):
+        m = jax.tree.leaves(stacked)[0].shape[0]
+        return OSGPState(stacked, jnp.ones((m,), jnp.float32),
+                         self.opt.init(stacked), jnp.zeros((), jnp.int32))
+
+    def round_fn(self, state, P, batches, step_gate=None):
+        lr = _lr(self.lr_decay, state.round)
+        gate = _gate(step_gate, batches)
+
+        def client(p, mu_i, s, b, gt):
+            K = jax.tree.leaves(b)[0].shape[0]
+
+            def step(carry, xs):
+                pp, ss = carry
+                batch, k = xs
+                z = jax.tree.map(lambda a: a / mu_i, pp)  # gradient at de-biased z
+                loss, g = jax.value_and_grad(self.loss_fn)(z, batch)
+                p2, s2 = self.opt.update(g, ss, pp, lr)
+                gk = gt[k]
+                p2 = jax.tree.map(lambda a, bb: gk * a + (1 - gk) * bb, p2, pp)
+                s2 = SGDState(jax.tree.map(
+                    lambda a, bb: gk * a + (1 - gk) * bb,
+                    s2.momentum, ss.momentum))
+                return (p2, s2), loss
+
+            (p, s), losses = jax.lax.scan(step, (p, s), (b, jnp.arange(K)))
+            return p, s, jnp.mean(losses)
+
+        params, opt, loss = jax.vmap(client)(
+            state.params, state.mu, state.opt, batches, gate)
+        params = _mix(P, params)
+        mu = jnp.einsum("mn,n->m", P, state.mu)
+        return OSGPState(params, mu, opt, state.round + 1), {
+            "loss": jnp.mean(loss)}
+
+    def eval_params(self, state):
+        mu = state.mu
+        return jax.tree.map(
+            lambda a: a / mu.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype),
+            state.params)
+
+
+# ---------------------------------------------------------------------------
+# Dis-PFL — personalized sparse masks over undirected gossip (simplified:
+# static random masks; the paper's cosine-annealed prune/regrow is noted in
+# DESIGN.md as a simplification)
+# ---------------------------------------------------------------------------
+class DisPFLState(NamedTuple):
+    params: Any
+    masks: Any            # per-client binary masks, same shapes as params
+    opt: SGDState
+    round: jnp.ndarray
+
+
+@dataclasses.dataclass(frozen=True)
+class DisPFL:
+    loss_fn: Callable
+    sparsity: float = 0.5
+    opt: SGD = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    lr_decay: float = 0.99
+
+    def init_masks(self, key, stacked):
+        """Per-client random binary masks at the target sparsity (small
+        leaves — biases, norms — stay dense, as in the reference impl)."""
+        leaves, treedef = jax.tree.flatten(stacked)
+        keys = jax.random.split(key, len(leaves))
+        masks = []
+        for a, k in zip(leaves, keys):
+            if a.ndim <= 2:
+                masks.append(jnp.ones_like(a))
+            else:
+                masks.append((jax.random.uniform(k, a.shape) >
+                              self.sparsity).astype(a.dtype))
+        return jax.tree.unflatten(treedef, masks)
+
+    def init(self, stacked, key=None):
+        key = jax.random.PRNGKey(7) if key is None else key
+        masks = self.init_masks(key, stacked)
+        params = jax.tree.map(lambda p, m: p * m, stacked, masks)
+        return DisPFLState(params, masks, self.opt.init(stacked),
+                           jnp.zeros((), jnp.int32))
+
+    def round_fn(self, state, P, batches, step_gate=None):
+        lr = _lr(self.lr_decay, state.round)
+        gate = _gate(step_gate, batches)
+
+        def client(p, msk, s, b, g):
+            filt = lambda gr, _p: jax.tree.map(lambda gg, mm: gg * mm, gr, msk)
+            return local.sgd_steps(self.loss_fn, self.opt, p, s, b, lr,
+                                   step_gate=g, grad_filter=filt)
+
+        params, opt, loss = jax.vmap(client)(
+            state.params, state.masks, state.opt, batches, gate)
+
+        # masked aggregation: average only where neighbours have weights
+        def agg(a, m):
+            num = jnp.einsum("mn,n...->m...", P.astype(a.dtype), a * m)
+            den = jnp.einsum("mn,n...->m...", P.astype(a.dtype), m)
+            mixed = num / jnp.maximum(den, 1e-8)
+            return jnp.where(m > 0, mixed, a)
+
+        params = jax.tree.map(agg, params, state.masks)
+        return DisPFLState(params, state.masks, opt, state.round + 1), {
+            "loss": jnp.mean(loss)}
+
+    def eval_params(self, state):
+        return state.params

@@ -1,0 +1,181 @@
+"""DFedPGP — Algorithm 1, faithful implementation.
+
+Per round t, per client i (vmapped over the stacked client axis):
+  1. z_i^{t,0} = u_i^t / mu_i^t                       (de-bias, line 18 prev round)
+  2. K_v SGD steps on the personal part v_i at fixed z_i^{t,0}   (lines 5-8)
+  3. K_u SGD steps on the shared part u_i, gradient evaluated at
+     z_i^{t,k} = u_i^{t,k} / mu_i^t                             (lines 9-12)
+  4. push/pull (p_{j,i} u, p_{j,i} mu) over the directed graph  (lines 14-17)
+     -> u_i^{t+1} = sum_j p_ij u_j^{t+1/2},  mu_i^{t+1} = sum_j p_ij mu_j
+
+The mixing matrix P_t is row-stochastic (pull form, paper Appendix B) and
+time-varying.  Gradients are taken on the full model once per step and
+masked to the active part — same compute as the paper's alternating scheme.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import SGD, SGDState
+from . import local, partition, pushsum
+
+
+class DFedPGPState(NamedTuple):
+    params: Any            # stacked (m, ...) — biased u leaves + personal v leaves
+    mu: jnp.ndarray        # (m,)
+    opt_u: SGDState
+    opt_v: SGDState
+    round: jnp.ndarray     # scalar int32
+
+
+@dataclasses.dataclass(frozen=True)
+class DFedPGP:
+    loss_fn: Callable              # (params, batch) -> scalar
+    mask: Any                      # shared(=True)/personal partition
+    opt_u: SGD = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    opt_v: SGD = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    k_v: int = 1                   # personal local steps per round
+    k_u: int = 5                   # shared local steps per round
+    lr_decay: float = 0.99
+    # optional gossip override (params, mu, round) -> (params, mu); used by
+    # the datacenter runtime's ppermute one-peer exponential mix (§Perf)
+    mix_fn: Optional[Callable] = None
+    # optional hook applied to the shared-part gradients before the
+    # optimizer (e.g. bf16 cast so the FSDP reduction runs at half the wire
+    # bytes, or a sharding constraint steering GSPMD to reduce-scatter)
+    grad_hook: Optional[Callable] = None
+    # gossip payload dtype ("bfloat16" halves the wire bytes of the
+    # push-pull transmission — the quantized push-sum of Taheri et al.
+    # [ICML'20], which the paper cites for communication efficiency).
+    # Push-sum tolerates the quantization: mu stays f32, z = u/mu de-biases.
+    gossip_dtype: Optional[str] = None
+
+    # ------------------------------------------------------------------
+    def init(self, stacked_params) -> DFedPGPState:
+        m = jax.tree.leaves(stacked_params)[0].shape[0]
+
+        def part_momentum(keep_shared: bool):
+            # full momentum only for the part this phase trains; the other
+            # part gets a per-client scalar placeholder (vmap-compatible).
+            return SGDState(jax.tree.map(
+                lambda p, msk: jnp.zeros_like(p) if msk == keep_shared
+                else jnp.zeros(p.shape[:1], p.dtype),
+                stacked_params, self.mask))
+
+        return DFedPGPState(
+            params=stacked_params,
+            mu=jnp.ones((m,), jnp.float32),
+            opt_u=part_momentum(True),
+            opt_v=part_momentum(False),
+            round=jnp.zeros((), jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    def local_update(self, params, mu_i, opt_u, opt_v, batches_v, batches_u,
+                     lr_scale, step_gate_u=None):
+        """One client's alternating update. params: unstacked pytree."""
+        mask = self.mask
+
+        def debias_leaf(p, m):
+            # cast back: mu is f32; without the cast the de-biased view of
+            # EVERY shared weight (and hence the FSDP gathers and the
+            # backward reductions) silently promotes to f32 — 2x the wire
+            # and HBM bytes when params are bf16 (§Perf P2).
+            return (p / mu_i).astype(p.dtype) if m else p
+
+        def rebias_leaf(p, m):
+            return p * mu_i if m else p
+
+        # ---- v-steps at fixed z^{t,0} (personal gradient only) ----
+        z = jax.tree.map(debias_leaf, params, mask)
+
+        def v_loss(p, batch):
+            # gradient flows to v leaves only; u leaves pinned at z^{t,0}
+            pz = partition.where(mask, jax.tree.map(jax.lax.stop_gradient, z), p)
+            return self.loss_fn(pz, batch)
+
+        params_v, opt_v, loss_v = local.sgd_steps(
+            v_loss, self.opt_v, params, opt_v, batches_v, lr_scale,
+            grad_filter=lambda g, p: local.masked_grads(g, mask, keep_shared=False))
+        params = partition.where(mask, params, params_v)   # take new v only
+
+        # ---- u-steps: gradient evaluated at z^{t,k} = u^{t,k}/mu, applied to
+        # the *biased* u with lr eta_u (Algorithm 1 lines 10-11, exactly) ----
+        K_u = jax.tree.leaves(batches_u)[0].shape[0]
+
+        def u_step(carry, xs):
+            p, s = carry
+            batch, k = xs
+            z_k = jax.tree.map(debias_leaf, p, mask)
+            loss, g = jax.value_and_grad(self.loss_fn)(z_k, batch)
+            g = local.masked_grads(g, mask, keep_shared=True)
+            if self.grad_hook is not None:
+                g = self.grad_hook(g)
+            p2, s2 = self.opt_u.update(g, s, p, lr_scale)
+            if step_gate_u is not None:
+                gate = step_gate_u[k]
+                blend = lambda new, old: jax.tree.map(
+                    lambda a, b: (gate * a + (1.0 - gate) * b
+                                  ).astype(a.dtype), new, old)
+                p2 = blend(p2, p)
+                s2 = SGDState(blend(s2.momentum, s.momentum))
+            # personal leaves must not move in the u-phase
+            p2 = partition.where(mask, p2, p)
+            return (p2, s2), loss
+
+        (params, opt_u), losses_u = jax.lax.scan(
+            u_step, (params, opt_u), (batches_u, jnp.arange(K_u)))
+        loss_u = jnp.mean(losses_u)
+        return params, opt_u, opt_v, (loss_v, loss_u)
+
+    # ------------------------------------------------------------------
+    def round_fn(self, state: DFedPGPState, P: jnp.ndarray, batches,
+                 step_gate_u=None):
+        """batches: {'v': leaves (m, K_v, B, ...), 'u': leaves (m, K_u, B, ...)}.
+        step_gate_u: optional (m, K_u) gates for computation heterogeneity."""
+        lr_scale = self.lr_decay ** state.round.astype(jnp.float32)
+        if step_gate_u is None:
+            shp = jax.tree.leaves(batches["u"])[0].shape[:2]   # (m, K_u)
+            step_gate_u = jnp.ones(shp, jnp.float32)
+
+        params, opt_u, opt_v, (loss_v, loss_u) = jax.vmap(
+            self.local_update, in_axes=(0, 0, 0, 0, 0, 0, None, 0))(
+                state.params, state.mu, state.opt_u, state.opt_v,
+                batches["v"], batches["u"], lr_scale, step_gate_u)
+
+        # ---- push/pull transmission on the shared part ----
+        if self.mix_fn is not None:
+            params, mu = self.mix_fn(params, state.mu, state.round, P)
+        else:
+            gdt = jnp.dtype(self.gossip_dtype) if self.gossip_dtype else None
+
+            def mix_leaf(a, m):
+                if not m:
+                    return a
+                w = a.astype(gdt) if gdt is not None else a
+                return jnp.einsum("mn,n...->m...", P.astype(w.dtype), w
+                                  ).astype(a.dtype)
+
+            params = jax.tree.map(mix_leaf, params, self.mask)
+            mu = jnp.einsum("mn,n->m", P, state.mu)
+
+        new_state = DFedPGPState(params, mu, opt_u, opt_v, state.round + 1)
+        metrics = {"loss_v": jnp.mean(loss_v), "loss_u": jnp.mean(loss_u),
+                   "mu_min": jnp.min(mu), "mu_max": jnp.max(mu)}
+        return new_state, metrics
+
+    # ------------------------------------------------------------------
+    def eval_params(self, state: DFedPGPState):
+        """Personalized models: de-biased shared part + personal part."""
+        mu = state.mu
+
+        def debias(a, m):
+            if not m:
+                return a
+            return a / mu.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+
+        return jax.tree.map(debias, state.params, self.mask)

@@ -1,0 +1,37 @@
+"""Gossip mixing through the Pallas push-sum kernel.
+
+Flattens every shared leaf of the stacked client params into one
+(m, d_flat) matrix and performs the whole round's push-pull as a single
+tiled MXU matmul (kernels/pushsum_mix) instead of one einsum per leaf —
+the FL simulator's hot-loop fast path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from . import partition
+
+
+def make_kernel_mix(mask, force: str = "auto"):
+    """-> mix_fn(params, mu, rnd, P) for DFedPGP(mix_fn=...)."""
+
+    def mix(params, mu, rnd, P):
+        del rnd
+        u, v = partition.split(params, mask)
+        leaves, treedef = jax.tree.flatten(u)
+        m = leaves[0].shape[0]
+        flat = jnp.concatenate(
+            [l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+        mixed = ops.pushsum_mix(P, flat, force=force)
+        out, off = [], 0
+        for l in leaves:
+            n = l[0].size
+            out.append(mixed[:, off:off + n].reshape(l.shape).astype(l.dtype))
+            off += n
+        u2 = jax.tree.unflatten(treedef, out)
+        mu2 = jnp.einsum("mn,n->m", P, mu)
+        return partition.merge(u2, v), mu2
+
+    return mix

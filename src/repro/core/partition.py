@@ -1,0 +1,63 @@
+"""Partial-model partition: shared `u` vs personal `v` (paper §3.1).
+
+A partition is a per-leaf boolean pytree (True = shared/u).  Built once from
+a params template via a path predicate, then used to split/merge params and
+to restrict gossip to the shared part — the "partial gradient push".
+"""
+from __future__ import annotations
+
+from typing import Any, Callable
+
+import jax
+
+
+def path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+        else:
+            out.append(str(p))
+    return "/".join(out)
+
+
+def build_mask(params, shared_pred: Callable[[str], bool]):
+    """True leaves = shared (u); False = personal (v)."""
+    flat = jax.tree_util.tree_flatten_with_path(params)[0]
+    treedef = jax.tree.structure(params)
+    mask = [bool(shared_pred(path_str(p))) for p, _ in flat]
+    return jax.tree.unflatten(treedef, mask)
+
+
+def classifier_personal(path: str) -> bool:
+    """Paper's split: linear classifier (+ final norm) personal, rest shared."""
+    personal = ("classifier" in path or "lm_head" in path
+                or "final_norm" in path or "dec_norm" in path)
+    return not personal
+
+
+def split(params, mask):
+    """-> (u_tree, v_tree) with None at the other side's leaves."""
+    u = jax.tree.map(lambda p, m: p if m else None, params, mask)
+    v = jax.tree.map(lambda p, m: None if m else p, params, mask)
+    return u, v
+
+
+def merge(u, v):
+    return jax.tree.map(lambda a, b: a if b is None else b, u, v,
+                        is_leaf=lambda x: x is None)
+
+
+def where(mask, a_tree, b_tree):
+    """Per-leaf select: mask ? a : b (used to apply gossip to u only)."""
+    return jax.tree.map(lambda m, a, b: a if m else b, mask, a_tree, b_tree)
+
+
+def count_params(params, mask=None, shared: bool = True) -> int:
+    leaves = jax.tree.leaves(params)
+    if mask is None:
+        return sum(x.size for x in leaves)
+    ms = jax.tree.leaves(mask)
+    return sum(x.size for x, m in zip(leaves, ms) if m == shared)

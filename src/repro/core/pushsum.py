@@ -1,0 +1,68 @@
+"""Push-sum primitives over stacked client pytrees.
+
+State per client i: biased shared parameters u_i, push-sum weight mu_i,
+de-biased parameters z_i = u_i / mu_i (Algorithm 1 lines 14-18).  All client
+states are stacked along a leading axis of size m so that mixing is one
+contraction with the (m, m) mixing matrix — the GSPMD-friendly form that the
+datacenter regime shards over the mesh's client axis.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class PushSumState(NamedTuple):
+    u: Any              # stacked shared params, leaves (m, ...)
+    mu: jnp.ndarray     # (m,) push-sum bias weights
+
+
+def init_state(u_stacked) -> PushSumState:
+    m = jax.tree.leaves(u_stacked)[0].shape[0]
+    return PushSumState(u_stacked, jnp.ones((m,), jnp.float32))
+
+
+def mix(P: jnp.ndarray, state: PushSumState) -> PushSumState:
+    """One push-pull transmission: u <- P u, mu <- P mu."""
+    def mix_leaf(a):
+        return jnp.einsum("mn,n...->m...", P.astype(a.dtype), a)
+
+    return PushSumState(jax.tree.map(mix_leaf, state.u),
+                        jnp.einsum("mn,n->m", P, state.mu))
+
+
+def debias(state: PushSumState):
+    """z_i = u_i / mu_i (line 18)."""
+    mu = state.mu
+
+    def d(a):
+        return a / mu.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+
+    return jax.tree.map(d, state.u)
+
+
+def rebias(z, mu: jnp.ndarray):
+    """u_i = z_i * mu_i (after local updates on de-biased parameters)."""
+    def r(a):
+        return a * mu.reshape((-1,) + (1,) * (a.ndim - 1)).astype(a.dtype)
+
+    return jax.tree.map(r, z)
+
+
+def consensus(state: PushSumState):
+    """De-biased average across clients — the deployment/serving model."""
+    z = debias(state)
+    return jax.tree.map(lambda a: jnp.mean(a, axis=0), z)
+
+
+def consensus_distance(state: PushSumState) -> jnp.ndarray:
+    """Mean squared distance of de-biased models from their average —
+    the convergence diagnostic used in EXPERIMENTS.md."""
+    z = debias(state)
+    dists = jax.tree.map(
+        lambda a: jnp.mean(jnp.sum(
+            jnp.square(a - jnp.mean(a, axis=0, keepdims=True)),
+            axis=tuple(range(1, a.ndim)))), z)
+    return sum(jax.tree.leaves(dists))

@@ -1,0 +1,109 @@
+"""Communication topologies: time-varying directed / undirected graphs.
+
+Mixing-matrix conventions (paper Appendix B):
+- **Row-stochastic ("pull")**: each row sums to 1.  Client i *pulls* models
+  from its in-neighbors and averages with its own weights — the paper's
+  experimental setup (Formula 6): n random in-neighbors + self, all 1/(n+1).
+- **Column-stochastic ("push")**: each column sums to 1 — the classic
+  push-sum setting (Kempe et al. 2003): client i splits its mass over its
+  out-neighbors.  Total mass sum_i u_i is conserved.
+
+Either way the push-sum weight mu de-biases the non-doubly-stochastic mixing:
+z_i = u_i / mu_i converges to a common consensus point.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# directed graphs
+# ---------------------------------------------------------------------------
+def directed_random(key, m: int, n_neighbors: int) -> jnp.ndarray:
+    """Paper's topology: every client pulls from `n` uniform random
+    in-neighbors plus itself; uniform weights 1/(n+1).  Row-stochastic."""
+    n = min(n_neighbors, m - 1)
+    # sample n distinct non-self neighbors per row via random permutation
+    keys = jax.random.split(key, m)
+
+    def row(i, k):
+        perm = jax.random.permutation(k, m - 1)[:n]
+        nb = jnp.where(perm >= i, perm + 1, perm)          # skip self
+        r = jnp.zeros((m,)).at[nb].set(1.0 / (n + 1))
+        return r.at[i].set(1.0 / (n + 1))
+
+    return jax.vmap(row)(jnp.arange(m), keys)
+
+
+def directed_exponential(m: int, round_idx) -> jnp.ndarray:
+    """One-peer exponential graph (SGP, arXiv:1811.10792): at round t each
+    client pulls from the single peer at offset 2^(t mod log2 m).
+    Row-stochastic with weights (1/2, 1/2).  B-strongly-connected with
+    B = log2(m)."""
+    assert m & (m - 1) == 0, "exponential graph wants power-of-two m"
+    log_m = max(int(np.log2(m)), 1)
+    offset = 2 ** jnp.mod(jnp.asarray(round_idx), log_m)
+    rows = jnp.arange(m)
+    src = jnp.mod(rows - offset, m)
+    P = jnp.zeros((m, m)).at[rows, src].set(0.5).at[rows, rows].add(0.5)
+    return P
+
+
+def ring(m: int) -> jnp.ndarray:
+    rows = jnp.arange(m)
+    P = jnp.zeros((m, m)).at[rows, jnp.mod(rows - 1, m)].set(0.5)
+    return P.at[rows, rows].add(0.5)
+
+
+def fully_connected(m: int) -> jnp.ndarray:
+    return jnp.full((m, m), 1.0 / m)
+
+
+def to_column_stochastic(P_row: jnp.ndarray) -> jnp.ndarray:
+    """Turn a pull (row-stochastic) pattern into the equivalent push
+    (column-stochastic) matrix over the transposed edge set."""
+    A = (P_row > 0).astype(jnp.float32).T                  # out-edges of each col
+    return A / jnp.sum(A, axis=0, keepdims=True)
+
+
+# ---------------------------------------------------------------------------
+# undirected graphs (for DFedAvgM / Dis-PFL baselines)
+# ---------------------------------------------------------------------------
+def undirected_random(key, m: int, n_neighbors: int) -> jnp.ndarray:
+    """Symmetric doubly-stochastic matrix via Metropolis-Hastings weights on a
+    random undirected n-regular-ish graph (paper's undirected baseline)."""
+    n = min(n_neighbors, m - 1)
+    # symmetric adjacency: union of each node's n random picks
+    picks = directed_random(key, m, n) > 0
+    adj = np.array(picks | picks.T)    # writable host copy
+    np.fill_diagonal(adj, False)
+    deg = adj.sum(1)
+    W = np.zeros((m, m))
+    for i in range(m):
+        for j in np.nonzero(adj[i])[0]:
+            W[i, j] = 1.0 / (max(deg[i], deg[j]) + 1.0)
+        W[i, i] = 1.0 - W[i].sum()
+    return jnp.asarray(W, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# diagnostics (numpy; used by tests and EXPERIMENTS)
+# ---------------------------------------------------------------------------
+def is_strongly_connected(P) -> bool:
+    A = np.asarray(P) > 0
+    m = A.shape[0]
+    reach = np.eye(m, dtype=bool) | A
+    for _ in range(int(np.ceil(np.log2(max(m, 2))))):
+        reach = reach | (reach @ reach)
+    return bool(reach.all())
+
+
+def union_strongly_connected(Ps) -> bool:
+    """Assumption 1 (B-bounded connectivity): is the union graph of a window
+    of mixing matrices strongly connected?"""
+    U = np.zeros_like(np.asarray(Ps[0]))
+    for P in Ps:
+        U = U + np.asarray(P)
+    return is_strongly_connected(U)

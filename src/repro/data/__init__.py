@@ -1,0 +1,7 @@
+from .synthetic import (ClientData, make_dataset, make_client_data,
+                        dirichlet_probs, pathological_probs, sample_batches,
+                        lm_synthetic_batch)
+
+__all__ = ["ClientData", "make_dataset", "make_client_data",
+           "dirichlet_probs", "pathological_probs", "sample_batches",
+           "lm_synthetic_batch"]

@@ -1,0 +1,113 @@
+"""Synthetic image-classification data + the paper's non-IID partitioners.
+
+No CIFAR in this container (repro gate) — we generate a CIFAR-like dataset:
+each class has a random smooth template image; samples are template + noise
++ random brightness, which makes the task learnable but non-trivial for a
+small CNN.  The *partition machinery* is exactly the paper's:
+
+- Dirichlet(alpha): each client's label distribution ~ Dir(alpha); smaller
+  alpha = more heterogeneous (paper uses 0.1 / 0.3).
+- Pathological(c): each client holds exactly c classes, uniformly.
+
+Test data is partitioned with the SAME per-client distribution as train
+(paper §5.1), which is what makes "personalized accuracy" meaningful.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ClientData(NamedTuple):
+    x: jnp.ndarray         # (m, n, H, W, C)
+    y: jnp.ndarray         # (m, n)
+    x_test: jnp.ndarray    # (m, n_test, H, W, C)
+    y_test: jnp.ndarray    # (m, n_test)
+    label_probs: jnp.ndarray  # (m, n_classes) — the partition that made it
+
+
+def _class_templates(key, n_classes: int, size: int, channels: int):
+    """Smooth random template per class (low-freq pattern)."""
+    k1, k2 = jax.random.split(key)
+    coarse = jax.random.normal(k1, (n_classes, size // 2, size // 2, channels))
+    templ = jax.image.resize(coarse, (n_classes, size, size, channels),
+                             "bilinear")
+    return templ * 1.5
+
+
+def dirichlet_probs(key, m: int, n_classes: int, alpha: float):
+    return jax.random.dirichlet(key, jnp.full((n_classes,), alpha), (m,))
+
+
+def pathological_probs(key, m: int, n_classes: int, c: int):
+    """Each client: c active classes, uniform over them."""
+    probs = np.zeros((m, n_classes))
+    rng = np.random.default_rng(int(jax.random.randint(key, (), 0, 2**31 - 1)))
+    for i in range(m):
+        cls = rng.choice(n_classes, size=min(c, n_classes), replace=False)
+        probs[i, cls] = 1.0 / len(cls)
+    return jnp.asarray(probs)
+
+
+def make_client_data(key, label_probs, n_train: int, n_test: int,
+                     size: int = 8, channels: int = 3,
+                     noise: float = 0.7) -> ClientData:
+    """Materialize per-client datasets of fixed size from label_probs (m, C)."""
+    m, n_classes = label_probs.shape
+    kt, ktr, kte = jax.random.split(key, 3)
+    templates = _class_templates(kt, n_classes, size, channels)
+
+    def sample_split(k, n):
+        ky, kn, kb = jax.random.split(k, 3)
+        y = jax.vmap(lambda kk, p: jax.random.choice(kk, n_classes, (n,), p=p))(
+            jax.random.split(ky, m), label_probs)
+        x = templates[y]                                        # (m, n, H, W, C)
+        x = x + noise * jax.random.normal(kn, x.shape)
+        x = x * (0.8 + 0.4 * jax.random.uniform(kb, (m, n, 1, 1, 1)))
+        return x.astype(jnp.float32), y.astype(jnp.int32)
+
+    x, y = sample_split(ktr, n_train)
+    xt, yt = sample_split(kte, n_test)
+    return ClientData(x, y, xt, yt, label_probs)
+
+
+def make_dataset(key, m: int, n_classes: int = 10, dist: str = "dirichlet",
+                 alpha: float = 0.3, c: int = 2, n_train: int = 64,
+                 n_test: int = 32, size: int = 8,
+                 noise: float = 0.7) -> ClientData:
+    kp, kd = jax.random.split(key)
+    if dist == "dirichlet":
+        probs = dirichlet_probs(kp, m, n_classes, alpha)
+    elif dist == "pathological":
+        probs = pathological_probs(kp, m, n_classes, c)
+    else:
+        raise ValueError(dist)
+    return make_client_data(kd, probs, n_train, n_test, size=size,
+                            noise=noise)
+
+
+def sample_batches(key, data: ClientData, k_steps: int, batch: int):
+    """Per-client minibatches for one round: leaves (m, K, B, ...)."""
+    m, n = data.y.shape
+    idx = jax.random.randint(key, (m, k_steps, batch), 0, n)
+    x = jax.vmap(lambda xc, ic: xc[ic])(data.x, idx)
+    y = jax.vmap(lambda yc, ic: yc[ic])(data.y, idx)
+    return {"x": x, "y": y}
+
+
+def lm_synthetic_batch(key, vocab: int, global_batch: int, seq: int):
+    """Synthetic LM batch for the datacenter regime / examples."""
+    k1, _ = jax.random.split(key)
+    # Markov-ish structure: next token = (token * 31 + noise) % vocab
+    t0 = jax.random.randint(k1, (global_batch, 1), 0, vocab)
+    def step(carry, k):
+        nxt = jnp.mod(carry * 31 + jax.random.randint(k, carry.shape, 0, 17),
+                      vocab)
+        return nxt, nxt
+    _, toks = jax.lax.scan(step, t0, jax.random.split(key, seq))
+    tokens = jnp.moveaxis(toks[..., 0], 0, 1)
+    labels = jnp.concatenate([tokens[:, 1:], tokens[:, :1]], axis=1)
+    return {"tokens": tokens, "labels": labels}

@@ -1,0 +1,3 @@
+from .simulator import SimConfig, build_algorithm, run_experiment, evaluate
+
+__all__ = ["SimConfig", "build_algorithm", "run_experiment", "evaluate"]

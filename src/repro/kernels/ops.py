@@ -1,0 +1,47 @@
+"""Dispatching wrappers for the Pallas kernels.
+
+Each op picks the execution path:
+  - TPU: the Pallas kernel (compiled);
+  - CPU/tests: either the pure-jnp oracle (fast) or the kernel in
+    interpret mode (`interpret=True` runs the kernel body in Python —
+    how the kernels are validated in this container).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention_pallas
+from .pushsum_mix import pushsum_mix_pallas
+from .rglru import rglru_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def pushsum_mix(P, U, force: str = "auto"):
+    """U' = P @ U over the stacked client axis. force: auto|pallas|ref."""
+    if force == "pallas" or (force == "auto" and _on_tpu()):
+        return pushsum_mix_pallas(P, U, interpret=not _on_tpu())
+    return ref.pushsum_mix_ref(P, U)
+
+
+def flash_attention(q, k, v, *, window: int = 0, scale=None,
+                    force: str = "auto"):
+    """Blocked causal attention. force: auto|pallas|ref."""
+    if force == "pallas" or (force == "auto" and _on_tpu()):
+        return flash_attention_pallas(q, k, v, window=window, scale=scale,
+                                      interpret=not _on_tpu())
+    return ref.flash_attention_ref(q, k, v, window=window, scale=scale)
+
+
+def rglru(a, b, force: str = "auto"):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t. force: auto|pallas|ref."""
+    if force == "pallas" or (force == "auto" and _on_tpu()):
+        return rglru_pallas(a, b, interpret=not _on_tpu())
+    return ref.rglru_ref(a, b)

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: the push-sum gossip contraction  (P @ U, P @ mu).
+
+The FL simulator's hot loop mixes the stacked shared parameters of all m
+clients with the round's directed mixing matrix P (m x m, row-stochastic):
+
+    U'  = P @ U      U: (m, d_flat)   -- every client's flattened u-part
+    mu' = P @ mu     mu: (m,)
+
+`d_flat` is huge (every shared weight of every client), so the contraction
+is tiled: P (m x m) stays resident in VMEM while (m, Bd) column panels of U
+stream HBM -> VMEM -> MXU.  m is padded to the 8-row sublane quantum and Bd
+is MXU-aligned (512 = 4 x 128 lanes).
+
+TPU adaptation (DESIGN.md §8): the paper's per-client socket push becomes a
+single dense matmul over the stacked client axis — on one host that IS the
+gossip round, and the kernel makes it an MXU op instead of m scattered
+axpys.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BD = 512            # column panel width (lanes: 4 x 128)
+MIN_M = 8           # sublane quantum for f32
+
+
+def _mix_kernel(p_ref, u_ref, out_ref):
+    # p_ref: (m, m) VMEM-resident; u_ref: (m, BD) panel; out: (m, BD)
+    out_ref[...] = jnp.dot(p_ref[...], u_ref[...],
+                           preferred_element_type=jnp.float32
+                           ).astype(out_ref.dtype)
+
+
+def pushsum_mix_pallas(P: jnp.ndarray, U: jnp.ndarray,
+                       block_d: int = BD, interpret: bool = False):
+    """U' = P @ U with P kept in VMEM and U streamed in (m, block_d) panels.
+
+    P: (m, m) float32; U: (m, d) any float dtype. Returns (m, d) like U.
+    """
+    m, d = U.shape
+    assert P.shape == (m, m)
+
+    # pad m to the sublane quantum and d to the lane panel
+    mp = max(-(-m // MIN_M) * MIN_M, MIN_M)
+    dp = -(-d // block_d) * block_d
+    Pp = jnp.zeros((mp, mp), jnp.float32).at[:m, :m].set(P.astype(jnp.float32))
+    Up = jnp.zeros((mp, dp), U.dtype).at[:m, :d].set(U)
+
+    grid = (dp // block_d,)
+    out = pl.pallas_call(
+        _mix_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((mp, mp), lambda i: (0, 0)),        # P resident
+            pl.BlockSpec((mp, block_d), lambda i: (0, i)),   # U panel
+        ],
+        out_specs=pl.BlockSpec((mp, block_d), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((mp, dp), U.dtype),
+        interpret=interpret,
+    )(Pp, Up)
+    return out[:m, :d]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets).
+
+Each function is the straight-line mathematical definition with no tiling,
+used by the kernel sweep tests and as the CPU execution path.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def pushsum_mix_ref(P: jnp.ndarray, U: jnp.ndarray) -> jnp.ndarray:
+    """U' = P @ U."""
+    return (P.astype(jnp.float32) @ U.astype(jnp.float32)).astype(U.dtype)
+
+
+def flash_attention_ref(q, k, v, *, window: int = 0, scale=None):
+    """Causal (optionally sliding-window) GQA attention, full-matrix math."""
+    B, S, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else 1.0 / math.sqrt(hd)
+    qf = q.astype(jnp.float32).reshape(B, S, Hkv, g, hd)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = kpos <= qpos
+    if window:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def rglru_ref(a, b):
+    """Gated linear recurrence  h_t = a_t * h_{t-1} + b_t  (h_0 = b_0).
+
+    a, b: (B, S, W) — the RG-LRU gate outputs (hybrid.py:_rglru_gates).
+    Sequential-scan definition; the Pallas kernel computes the same
+    recurrence with chunked HBM->VMEM streaming.  Returns (B, S, W) f32.
+    """
+    B, S, W = a.shape
+
+    def step(h, ab):
+        a_t, b_t = ab
+        h = a_t * h + b_t
+        return h, h
+
+    a_t = jnp.moveaxis(a.astype(jnp.float32), 1, 0)      # (S, B, W)
+    b_t = jnp.moveaxis(b.astype(jnp.float32), 1, 0)
+    _, hs = jax.lax.scan(step, jnp.zeros((B, W), jnp.float32), (a_t, b_t))
+    return jnp.moveaxis(hs, 0, 1)

@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: chunked RG-LRU linear recurrence.
+
+Computes  h_t = a_t * h_{t-1} + b_t  over (B, S, W) gate tensors.
+
+TPU adaptation of Griffin's fused CUDA scan (DESIGN.md §8): the recurrence
+is inherently sequential in t, so the kernel keeps the carry h in VMEM
+scratch and streams (BS=256)-step time chunks of a/b HBM->VMEM while the
+VPU walks the chunk; the W dim is tiled to the 128-lane quantum so one grid
+cell works on a (BS, BW) panel.  Grid order (B, W-tiles, S-chunks) with the
+S dim innermost and sequential, so the carry survives between chunks.
+
+This is a bandwidth-bound op (2 reads + 1 write per element, O(S*W) flops);
+the kernel's job is purely to keep HBM streaming while the recurrence walks.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+BS = 256      # time-chunk
+BW = 128      # lane tile
+
+
+def _rglru_kernel(a_ref, b_ref, o_ref, h_ref, *, bs: int):
+    si = pl.program_id(2)
+
+    @pl.when(si == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    a = a_ref[...]                      # (1, bs, bw) f32
+    b = b_ref[...]
+
+    def step(t, h):
+        h = a[0, t] * h + b[0, t]
+        o_ref[0, t, :] = h
+        return h
+
+    h_ref[...] = jax.lax.fori_loop(0, bs, step, h_ref[...])
+
+
+def rglru_pallas(a, b, *, bs: int = BS, bw: int = BW,
+                 interpret: bool = False):
+    """a, b: (B, S, W) f32 -> h: (B, S, W) f32."""
+    B, S, W = a.shape
+    bs = min(bs, S)
+    bw = min(bw, W)
+    assert S % bs == 0 and W % bw == 0, (S, W, bs, bw)
+
+    kernel = functools.partial(_rglru_kernel, bs=bs)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, W // bw, S // bs),
+        in_specs=[
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+            pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+        ],
+        out_specs=pl.BlockSpec((1, bs, bw), lambda bi, wi, si: (bi, si, wi)),
+        out_shape=jax.ShapeDtypeStruct((B, S, W), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bw,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(a.astype(jnp.float32), b.astype(jnp.float32))

@@ -1,0 +1,236 @@
+"""Sharding rules: param-path patterns -> PartitionSpec.
+
+Rules are written against the *logical* trailing dims of each leaf; any extra
+leading dims (the stacked-layer axis, the stacked-client axis) are padded
+with None / the client axes.  `TP` is resolved to the tensor-parallel mesh
+axes (('model',) normally; ('data','model') for the pod_clients strategy on
+the multi-pod mesh).  A divisibility check demotes TP to replication (trying
+alternative dims first) so odd vocabularies (whisper 51866, granite 49155)
+still lower.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+TP = "__TP__"
+
+# (regex on the path, logical trailing spec). First match wins.
+RULES: Tuple[Tuple[str, Tuple] , ...] = (
+    # --- MoE routed experts: expert-parallel over TP ---
+    (r"moe/w[gud]$",               (TP, None, None)),
+    (r"moe/router$",               (None, None)),
+    (r"(shared|mlp)/w[gu]$",       (None, TP)),
+    (r"(shared|mlp)/wd$",          (TP, None)),
+    # --- MLA ---
+    (r"attn/wq_a$",                (None, TP)),
+    (r"attn/wq_b$",                (None, TP, None)),
+    (r"attn/wkv_a$",               (None, None)),
+    (r"attn/wkv_b$",               (None, TP, None)),
+    # --- attention (GQA / cross / self) ---
+    (r"attn/w[qkv]$",              (None, TP)),
+    (r"attn/wo$",                  (TP, None)),
+    (r"attn/b[qkv]$",              (TP,)),
+    # --- dense MLPs ---
+    (r"mlp/w1$",                   (None, TP)),
+    (r"mlp/w2$",                   (TP, None)),
+    (r"mlp/b1$",                   (TP,)),
+    (r"mlp/b2$",                   (None,)),
+    # --- RG-LRU / Griffin ---
+    (r"rec/w_in_[xy]$",            (None, TP)),
+    (r"rec/w_[ai]$",               (None, TP)),
+    (r"rec/w_out$",                (TP, None)),
+    (r"rec/(b_[ai]|lam)$",         (TP,)),
+    (r"rec/conv_w$",               (None, TP)),
+    # --- xLSTM ---
+    (r"w_up$",                     (None, TP)),
+    (r"w_down$",                   (TP, None)),
+    (r"w_gates$",                  (None, TP)),
+    (r"r_gates$",                  (TP, None, None)),
+    (r"(^|/)w[qkv]$",              (None, TP)),
+    (r"w_if$",                     (None, None)),
+    (r"conv_w$",                   (None, TP)),
+    (r"(^|/)gn$",                  (TP,)),
+    (r"b_if$",                     (None,)),
+    (r"b_gates$",                  (TP,)),
+    # --- embeddings / heads ---
+    (r"^embed$",                   (TP, None)),
+    (r"^lm_head$",                 (None, TP)),
+    # --- CNN (FL sim model) ---
+    (r"features/conv\d$",          (None, None, None, TP)),
+    (r"features/dense$",           (None, TP)),
+    (r"classifier/w$",             (None, None)),
+)
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        return mesh.shape[axes]
+    return int(jax.numpy.prod(jax.numpy.array(
+        [mesh.shape[a] for a in axes])))  # pragma: no cover
+
+
+def _tp_size(mesh: Mesh, tp_axes: Sequence[str]) -> int:
+    s = 1
+    for a in tp_axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def _resolve(spec: Tuple, shape: Tuple[int, ...], tp, tp_size: int) -> Tuple:
+    """Substitute TP, enforcing divisibility; try to relocate TP if needed."""
+    out = list(spec)
+    tp_pos = [i for i, s in enumerate(out) if s == TP]
+    if not tp_pos:
+        return tuple(out)
+    i = tp_pos[0]
+    if shape[i] % tp_size == 0:
+        out[i] = tp
+        return tuple(out)
+    # preferred dim not divisible: try the other dims (largest first)
+    out[i] = None
+    cands = sorted((d for d in range(len(shape)) if d != i and out[d] is None),
+                   key=lambda d: -shape[d])
+    for d in cands:
+        if shape[d] % tp_size == 0:
+            out[d] = tp
+            break
+    return tuple(out)
+
+
+def _add_fsdp(resolved: Tuple, shape: Tuple[int, ...], fsdp_axes,
+              fsdp_size: int) -> Tuple:
+    """Place the FSDP axes on the largest still-unsharded divisible dim.
+
+    Weight-sharding over the data axis: GSPMD inserts the per-layer
+    all-gather (classic FSDP).  Used for archs whose per-client parameters
+    exceed one TP row (deepseek-v2-236b) and for long_500k decode."""
+    if not fsdp_axes or fsdp_size <= 1:
+        return resolved
+    fs = tuple(fsdp_axes) if len(fsdp_axes) > 1 else fsdp_axes[0]
+    out = list(resolved)
+    cands = sorted((d for d in range(len(shape)) if out[d] is None),
+                   key=lambda d: -shape[d])
+    for d in cands:
+        if shape[d] % fsdp_size == 0 and shape[d] >= fsdp_size:
+            out[d] = fs
+            break
+    return tuple(out)
+
+
+def spec_for_path(path: str, shape: Tuple[int, ...], tp_axes: Sequence[str],
+                  tp_size: int, n_stack_extra: int = 0,
+                  fsdp_axes: Sequence[str] = (), fsdp_size: int = 1) -> P:
+    """PartitionSpec for a single-model leaf (no client axis).
+
+    n_stack_extra: leading stacked dims beyond what the rule covers are
+    replicated (layer stacks).
+    """
+    tp = tuple(tp_axes) if len(tp_axes) > 1 else tp_axes[0]
+    for pat, spec in RULES:
+        if re.search(pat, path):
+            k = len(spec)
+            lead = len(shape) - k
+            if lead < 0:      # leaf smaller than rule (e.g. vmapped oddity)
+                return P()
+            resolved = _resolve(spec, shape[lead:], tp, tp_size)
+            resolved = _add_fsdp(resolved, shape[lead:], fsdp_axes, fsdp_size)
+            return P(*([None] * lead), *resolved)
+    # replicate by default (norms, scalars, biases) — but big unmatched
+    # leaves still get FSDP so nothing large is ever fully replicated.
+    # Never shard dim 0 of a multi-dim leaf (it may be a scanned layer stack).
+    if fsdp_axes and fsdp_size > 1 and len(shape) >= 1:
+        if len(shape) == 1:
+            resolved = _add_fsdp((None,), shape, fsdp_axes, fsdp_size)
+        else:
+            resolved = (None,) + _add_fsdp(tuple([None] * (len(shape) - 1)),
+                                           shape[1:], fsdp_axes, fsdp_size)
+        return P(*resolved)
+    return P()  # replicate by default (norms, scalars, biases)
+
+
+def params_sharding(params_tree, mesh: Mesh, tp_axes: Sequence[str],
+                    client_axes: Optional[Sequence[str]] = None,
+                    fsdp_axes: Sequence[str] = ()):
+    """NamedShardings for a (possibly client-stacked) param tree.
+
+    client_axes: if given, every leaf's FIRST dim is the stacked-client dim
+    sharded over those axes.  fsdp_axes: additionally shard every weight
+    over these axes (largest free divisible dim per leaf).
+    """
+    tp_size = _tp_size(mesh, tp_axes)
+    fsdp_size = _tp_size(mesh, fsdp_axes) if fsdp_axes else 1
+    ca = None
+    if client_axes:
+        ca = tuple(client_axes) if len(client_axes) > 1 else client_axes[0]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_tree)
+    out = []
+    for path, leaf in flat:
+        pstr = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        shape = leaf.shape
+        if client_axes:
+            inner = spec_for_path(pstr, shape[1:], tp_axes, tp_size,
+                                  fsdp_axes=fsdp_axes, fsdp_size=fsdp_size)
+            spec = P(ca, *inner)
+        else:
+            spec = spec_for_path(pstr, shape, tp_axes, tp_size,
+                                 fsdp_axes=fsdp_axes, fsdp_size=fsdp_size)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_sharding(batch_tree, mesh: Mesh, batch_axes: Sequence[str]):
+    """Shard the leading (client or batch) dim of every leaf."""
+    ba = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+
+    def spec(leaf):
+        return NamedSharding(mesh, P(ba, *([None] * (leaf.ndim - 1))))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def replicated(tree, mesh: Mesh):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+def cache_sharding(cache_tree, mesh: Mesh, batch_axes: Sequence[str],
+                   tp_axes: Sequence[str]):
+    """KV caches / recurrent state: leading layer-stack dims replicated, the
+    batch dim sharded over batch_axes, heads/width dims over TP if divisible.
+
+    Heuristic per leaf: find the batch dim as the first dim whose size equals
+    the global decode batch; we instead mark dim *after* any leading stack
+    dims by convention: caches here are either (L, B, ...) stacked or (B, ...)
+    per-layer lists.  We shard the first dim of size == batch if possible.
+    """
+    tp_size = _tp_size(mesh, tp_axes)
+    ba = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]
+    ba_size = 1
+    for a in batch_axes:
+        ba_size *= mesh.shape[a]
+    tp = tuple(tp_axes) if len(tp_axes) > 1 else tp_axes[0]
+
+    def spec(leaf):
+        dims = [None] * leaf.ndim
+        placed_b = False
+        for i, s in enumerate(leaf.shape):
+            if not placed_b and s % ba_size == 0 and s > 1 and i <= 1:
+                dims[i] = ba
+                placed_b = True
+                break
+        # shard the last dim on TP when divisible (heads*hd or width)
+        for i in range(leaf.ndim - 1, max(leaf.ndim - 3, 0), -1):
+            if dims[i] is None and leaf.shape[i] % tp_size == 0 \
+                    and leaf.shape[i] >= tp_size:
+                dims[i] = tp
+                break
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(spec, cache_tree)

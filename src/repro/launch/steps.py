@@ -1,0 +1,394 @@
+"""Step builders + ShapeDtypeStruct input specs for the production meshes.
+
+Regime B (DESIGN.md §2): each "client" of the paper's decentralized directed
+gossip is a data-parallel rank of the mesh holding its OWN personalized
+parameter values.  The stacked client axis is a real array axis sharded over
+the mesh's data (and pod) axes; the model dims are tensor-parallel over the
+`model` axis.  The paper's push-sum gossip of the shared part `u` becomes a
+mixing-matrix contraction (baseline, paper-faithful) or a shard_map
+ppermute schedule over a one-peer exponential graph (optimized, §Perf).
+
+Layouts
+-------
+- ``data_clients`` (default): clients over ('pod','data'); TP='model'.
+- ``fsdp``: a single client whose weights are FSDP-sharded over 'data' and
+  TP-sharded over 'model' — used for deepseek-v2-236b (a 236B-param client
+  does not fit a 16-chip TP row) and for long_500k decode (global_batch=1
+  cannot feed 16 clients).  On the multi-pod mesh deepseek-v2 keeps one
+  client per pod ('pod' = client axis): sparse directed gossip across the
+  slow inter-pod links, which is exactly the deployment story the paper
+  tells for heterogeneous communication resources.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import InputShape
+from repro.core import dfedpgp, partition
+from repro.models import get_model, prefill_logits
+from repro.models.config import ModelConfig
+from repro.optim import SGD
+from . import sharding
+
+
+class Layout(NamedTuple):
+    client_axes: Tuple[str, ...]   # stacked-client dim of every leaf
+    batch_axes: Tuple[str, ...]    # within-client batch dim (fsdp layout)
+    tp_axes: Tuple[str, ...]
+    fsdp_axes: Tuple[str, ...]
+    n_clients: int
+    per_client_batch: int
+
+
+# archs whose per-client parameters exceed one 16-chip TP row
+FSDP_ARCHS = ("deepseek-v2-236b",)
+
+
+def decide_layout(mesh: Mesh, arch_id: str, shape: InputShape) -> Layout:
+    axes = mesh.axis_names
+    multi_pod = "pod" in axes
+
+    def nsize(axs):
+        n = 1
+        for a in axs:
+            n *= mesh.shape[a]
+        return n
+
+    if arch_id in FSDP_ARCHS:
+        ca = ("pod",) if multi_pod else ()
+        m = nsize(ca) if ca else 1
+        return Layout(ca, ("data",), ("model",), ("data",), m,
+                      shape.global_batch // m)
+
+    client_axes = ("pod", "data") if multi_pod else ("data",)
+    m = nsize(client_axes)
+    if shape.global_batch < m:
+        # long_500k (B=1): one model, weights FSDP over the idle data axis
+        fa = ("pod", "data") if multi_pod else ("data",)
+        return Layout((), (), ("model",), fa, 1, shape.global_batch)
+    return Layout(client_axes, (), ("model",), (), m, shape.global_batch // m)
+
+
+# ---------------------------------------------------------------------------
+# input specs (ShapeDtypeStructs — never allocated)
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_struct(cfg: ModelConfig, shape: InputShape, lead: Tuple[int, ...]):
+    """One model-input batch with leading dims `lead` (e.g. (m, K, B)).
+
+    seq_len is the TOTAL context: for the VLM family the assigned vision
+    tokens occupy the first n_vision_tokens positions; for the audio family
+    the (stub) conv frontend supplies n_frames frame embeddings and seq_len
+    is the decoder length.
+    """
+    S = shape.seq_len
+    if cfg.family == "vlm":
+        nv = cfg.n_vision_tokens
+        st = S - nv
+        return {"tokens": _sds(lead + (st,), jnp.int32),
+                "vision": _sds(lead + (nv, cfg.d_model), jnp.float32),
+                "labels": _sds(lead + (st,), jnp.int32)}
+    if cfg.family == "encdec":
+        return {"frames": _sds(lead + (cfg.n_frames, cfg.d_model),
+                               jnp.float32),
+                "tokens": _sds(lead + (S,), jnp.int32),
+                "labels": _sds(lead + (S,), jnp.int32)}
+    return {"tokens": _sds(lead + (S,), jnp.int32),
+            "labels": _sds(lead + (S,), jnp.int32)}
+
+
+def stacked_param_struct(cfg: ModelConfig, m: int):
+    api = get_model(cfg)
+
+    def init_m():
+        keys = jax.random.split(jax.random.PRNGKey(0), m)
+        return jax.vmap(lambda k: api.init_params(k, cfg))(keys)
+
+    return jax.eval_shape(init_m)
+
+
+def input_specs(cfg: ModelConfig, shape: InputShape, layout: Layout,
+                k_u: int = 1, k_v: int = 1):
+    """ShapeDtypeStructs for the step function's data arguments."""
+    m, B = layout.n_clients, layout.per_client_batch
+    if shape.kind == "train":
+        return {
+            "batches": {"v": batch_struct(cfg, shape, (m, k_v, B)),
+                        "u": batch_struct(cfg, shape, (m, k_u, B))},
+            "P": _sds((m, m), jnp.float32),
+        }
+    if shape.kind == "prefill":
+        b = batch_struct(cfg, shape, (m, B))
+        b.pop("labels")
+        return {"batch": b}
+    # decode: one new token against a seq_len-deep cache / recurrent state
+    api = get_model(cfg)
+    cache = jax.eval_shape(lambda: api.init_cache(cfg, B, shape.seq_len))
+    cache = jax.tree.map(lambda x: _sds((m,) + x.shape, x.dtype), cache)
+    return {"cache": cache, "tokens": _sds((m, B, 1), jnp.int32),
+            "pos": _sds((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# shardings
+# ---------------------------------------------------------------------------
+def _axes_or_none(axs):
+    if not axs:
+        return None
+    return tuple(axs) if len(axs) > 1 else axs[0]
+
+
+def batch_specs(batch_tree, mesh: Mesh, layout: Layout, n_lead: int):
+    """Client dim (0) over client_axes; per-client batch dim (n_lead) over
+    batch_axes; everything else replicated."""
+    ca = _axes_or_none(layout.client_axes)
+    ba = _axes_or_none(layout.batch_axes)
+
+    def spec(leaf):
+        dims = [None] * leaf.ndim
+        if ca is not None and leaf.ndim:
+            dims[0] = ca
+        if ba is not None and leaf.ndim > n_lead:
+            dims[n_lead] = ba
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(spec, batch_tree)
+
+
+def params_shardings(params_struct, mesh: Mesh, layout: Layout):
+    return sharding.params_sharding(
+        params_struct, mesh, layout.tp_axes,
+        client_axes=layout.client_axes or None,
+        fsdp_axes=layout.fsdp_axes)
+
+
+def state_shardings(state_struct, mesh: Mesh, layout: Layout):
+    """Shardings for a DFedPGPState with client-stacked params/opt trees."""
+    ps = params_shardings(state_struct.params, mesh, layout)
+    ca = _axes_or_none(layout.client_axes)
+
+    def opt_shardings(mom_struct):
+        # full-momentum leaves share the param sharding; per-client scalar
+        # placeholders (shape (m,)) live on the client axis only.
+        def one(param_sh, leaf):
+            if leaf.ndim <= 1:
+                return NamedSharding(mesh, P(ca) if (ca is not None
+                                              and leaf.ndim == 1) else P())
+            return param_sh
+
+        return type(mom_struct)(jax.tree.map(one, ps, mom_struct.momentum))
+
+    return dfedpgp.DFedPGPState(
+        params=ps,
+        mu=NamedSharding(mesh, P(ca) if ca is not None else P()),
+        opt_u=opt_shardings(state_struct.opt_u),
+        opt_v=opt_shardings(state_struct.opt_v),
+        round=NamedSharding(mesh, P()),
+    )
+
+
+def cache_shardings(cache_struct, mesh: Mesh, layout: Layout):
+    """KV caches / recurrent state: (client, [layer-stack,] batch, ...)."""
+    ca = _axes_or_none(layout.client_axes)
+    ba = _axes_or_none(layout.batch_axes)
+    tp = _axes_or_none(layout.tp_axes)
+    tp_size = int(np.prod([mesh.shape[a] for a in layout.tp_axes],
+                          dtype=np.int64)) if layout.tp_axes else 1
+    ba_size = int(np.prod([mesh.shape[a] for a in layout.batch_axes],
+                          dtype=np.int64)) if layout.batch_axes else 1
+
+    def spec(leaf):
+        dims = [None] * leaf.ndim
+        if ca is not None:
+            dims[0] = ca
+        if ba is not None:
+            for i in range(1, min(leaf.ndim, 3)):
+                if leaf.shape[i] % ba_size == 0 and leaf.shape[i] >= ba_size:
+                    dims[i] = ba
+                    break
+        for i in range(leaf.ndim - 1, 1, -1):
+            if dims[i] is None and leaf.shape[i] % tp_size == 0 \
+                    and leaf.shape[i] >= tp_size and leaf.shape[i] > 1:
+                dims[i] = tp
+                break
+        return NamedSharding(mesh, P(*dims))
+
+    return jax.tree.map(spec, cache_struct)
+
+
+# ---------------------------------------------------------------------------
+# gossip variants
+# ---------------------------------------------------------------------------
+def make_ppermute_mix(mesh: Mesh, layout: Layout, mask, params_struct,
+                      wire_dtype=None):
+    """Beyond-paper gossip (§Perf): one-peer exponential directed graph via
+    shard_map + lax.ppermute along the client axis.
+
+    Per round every client pulls from the single peer at offset
+    2^(t mod log2 m) (SGP's B-strongly-connected schedule, B=log2 m) with
+    weights (1/2, 1/2) — a doubly-stochastic permutation mix, so the
+    push-sum weight stays exactly 1.  Wire bytes: |u| per client per round
+    instead of the mixing-matrix contraction's m-way reduce.
+
+    Returns mix_fn(params, mu, rnd) -> (params, mu).
+    """
+    ca = layout.client_axes
+    axis = ca if len(ca) > 1 else ca[0]
+    m = layout.n_clients
+    log_m = max(int(np.log2(m)), 1)
+    assert m & (m - 1) == 0, "exponential graph wants power-of-two clients"
+
+    ps = params_shardings(params_struct, mesh, layout)
+    u_specs = jax.tree.map(lambda s, msk: s.spec if msk else None,
+                           ps, mask)
+
+    def mix(params, mu, rnd, P_unused=None):
+        u, v = partition.split(params, mask)
+
+        def body(rnd_s, u_shard, mu_shard):
+            def permute(a):
+                def branch(off):
+                    perm = [(i, (i + off) % m) for i in range(m)]
+                    return jax.lax.ppermute(a, axis, perm)
+
+                return jax.lax.switch(
+                    jnp.mod(rnd_s, log_m),
+                    [(lambda o=2 ** j: branch(o)) for j in range(log_m)])
+
+            def mix_leaf(a):
+                # quantized push-sum payload: ONLY the permuted copy is
+                # narrowed (the wire), the resident copy stays full —
+                # wire bytes halve, locally-held precision is unchanged.
+                recv = permute(a.astype(wire_dtype) if wire_dtype else a)
+                return (a + recv.astype(a.dtype)) * 0.5
+
+            u2 = jax.tree.map(mix_leaf, u_shard)
+            mu2 = (mu_shard + permute(mu_shard)) * 0.5
+            return u2, mu2
+
+        u2, mu2 = jax.shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), u_specs, P(axis)),
+            out_specs=(u_specs, P(axis)))(rnd, u, mu)
+        return partition.merge(u2, v), mu2
+
+    return mix
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+def build_train_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
+                     shape: InputShape, k_u: int = 1, k_v: int = 1,
+                     gossip: str = "matrix", bf16_grads: bool = False,
+                     gossip_dtype: str = ""):
+    """-> (train_step, in_shardings, out_shardings, arg_structs).
+
+    train_step(state, P, batches) -> (state, metrics): one DFedPGP round —
+    K_v personal steps, K_u shared steps at the de-biased parameters, then
+    the directed push-sum mixing of the shared part.
+    """
+    api = get_model(cfg)
+
+    def loss_fn(p, batch):
+        return api.loss_fn(p, batch, cfg)
+
+    params_struct = stacked_param_struct(cfg, layout.n_clients)
+    template = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params_struct)
+    mask = partition.build_mask(template, partition.classifier_personal)
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    mix_fn = None
+    if gossip == "ppermute":
+        wd = jnp.dtype(gossip_dtype) if gossip_dtype else None
+        mix_fn = make_ppermute_mix(mesh, layout, mask, params_struct,
+                                   wire_dtype=wd)
+    grad_hook = None
+    if bf16_grads:
+        # §Perf H2: cast shared-part grads to bf16 before the optimizer so
+        # the cross-data-shard gradient reduction moves half the bytes.
+        grad_hook = lambda g: jax.tree.map(
+            lambda x: x.astype(jnp.bfloat16) if x.ndim else x, g)
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
+                           k_v=k_v, k_u=k_u, mix_fn=mix_fn,
+                           grad_hook=grad_hook,
+                           gossip_dtype=gossip_dtype or None)
+
+    state_struct = jax.eval_shape(algo.init, params_struct)
+    specs = input_specs(cfg, shape, layout, k_u=k_u, k_v=k_v)
+
+    st_sh = state_shardings(state_struct, mesh, layout)
+    b_sh = batch_specs(specs["batches"], mesh, layout, n_lead=2)
+    metrics_sh = {k: NamedSharding(mesh, P())
+                  for k in ("loss_v", "loss_u", "mu_min", "mu_max")}
+
+    def train_step(state, Pm, batches):
+        return algo.round_fn(state, Pm, batches)
+
+    return (train_step,
+            (st_sh, NamedSharding(mesh, P()), b_sh),
+            (st_sh, metrics_sh),
+            (state_struct, specs["P"], specs["batches"]))
+
+
+def build_prefill_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
+                       shape: InputShape):
+    icfg = cfg.replace(remat=False)
+
+    def prefill_step(params, batch):
+        return jax.vmap(lambda p, b: prefill_logits(p, b, icfg))(params,
+                                                                 batch)
+
+    params_struct = stacked_param_struct(icfg, layout.n_clients)
+    specs = input_specs(icfg, shape, layout)
+    ps = params_shardings(params_struct, mesh, layout)
+    b_sh = batch_specs(specs["batch"], mesh, layout, n_lead=1)
+    out_sh = NamedSharding(mesh, P(_axes_or_none(layout.client_axes),
+                                   _axes_or_none(layout.batch_axes)))
+    return prefill_step, (ps, b_sh), out_sh, (params_struct, specs["batch"])
+
+
+def build_decode_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
+                      shape: InputShape):
+    icfg = cfg.replace(remat=False)
+    api = get_model(icfg)
+
+    def serve_step(params, cache, tokens, pos):
+        def one(p, c, t):
+            return api.decode_step(p, c, t, pos, icfg)
+
+        return jax.vmap(one)(params, cache, tokens)
+
+    params_struct = stacked_param_struct(icfg, layout.n_clients)
+    specs = input_specs(icfg, shape, layout)
+    ps = params_shardings(params_struct, mesh, layout)
+    c_sh = cache_shardings(specs["cache"], mesh, layout)
+    t_sh = batch_specs(specs["tokens"], mesh, layout, n_lead=1)
+    logits_sh = NamedSharding(mesh, P(_axes_or_none(layout.client_axes)))
+    return (serve_step,
+            (ps, c_sh, t_sh, NamedSharding(mesh, P())),
+            (logits_sh, c_sh),
+            (params_struct, specs["cache"], specs["tokens"], specs["pos"]))
+
+
+def build_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
+               shape: InputShape, **kw):
+    """-> (fn, in_shardings, out_shardings, arg_structs, donate_argnums)."""
+    if shape.kind == "train":
+        fn, ins, outs, args = build_train_step(cfg, mesh, layout, shape, **kw)
+        donate = (0,)          # state
+    elif shape.kind == "prefill":
+        fn, ins, outs, args = build_prefill_step(cfg, mesh, layout, shape)
+        donate = ()
+    else:
+        fn, ins, outs, args = build_decode_step(cfg, mesh, layout, shape)
+        donate = (1,)          # cache
+    return fn, ins, outs, args, donate

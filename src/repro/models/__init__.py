@@ -1,0 +1,57 @@
+"""Model zoo registry: one ModelApi per family."""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+from .config import ModelConfig
+from . import dense, moe, ssm, hybrid, encdec, vlm
+
+
+class ModelApi(NamedTuple):
+    init_params: Callable[..., Any]
+    loss_fn: Callable[..., Any]          # (params, batch, cfg) -> scalar
+    init_cache: Callable[..., Any]       # (cfg, batch, cache_len) -> cache
+    decode_step: Callable[..., Any]      # (params, cache, tokens, pos, cfg)
+
+
+_FAMILIES = {
+    "dense": ModelApi(dense.init_params, dense.loss_fn, dense.init_cache,
+                      dense.decode_step),
+    "moe": ModelApi(moe.init_params, moe.loss_fn, moe.init_cache,
+                    moe.decode_step),
+    "ssm": ModelApi(ssm.init_params, ssm.loss_fn, ssm.init_cache,
+                    ssm.decode_step),
+    "hybrid": ModelApi(hybrid.init_params, hybrid.loss_fn, hybrid.init_cache,
+                       hybrid.decode_step),
+    "encdec": ModelApi(encdec.init_params, encdec.loss_fn, encdec.init_cache,
+                       encdec.decode_step),
+    "vlm": ModelApi(vlm.init_params, vlm.loss_fn, vlm.init_cache,
+                    vlm.decode_step),
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    return _FAMILIES[cfg.family]
+
+
+def prefill_logits(params, batch, cfg: ModelConfig):
+    """Inference prefill: full forward, lm_head on the LAST position only
+    (the next-token sample point) — matching real serving cost."""
+    fam = cfg.family
+    if fam == "dense":
+        return dense.forward_train(params, batch["tokens"], cfg, last_only=True)
+    if fam == "moe":
+        return moe.forward_train(params, batch["tokens"], cfg, last_only=True)[0]
+    if fam == "ssm":
+        return ssm.forward_train(params, batch["tokens"], cfg, last_only=True)
+    if fam == "hybrid":
+        return hybrid.forward_train(params, batch["tokens"], cfg, last_only=True)
+    if fam == "encdec":
+        return encdec.forward_train(params, batch, cfg, last_only=True)
+    if fam == "vlm":
+        return vlm.forward_train(params, batch, cfg, last_only=True)
+    raise ValueError(fam)
+
+
+__all__ = ["ModelConfig", "ModelApi", "get_model", "prefill_logits",
+           "dense", "moe", "ssm", "hybrid", "encdec", "vlm"]

@@ -1,0 +1,96 @@
+"""Small CNN classifier for the FL simulation regime (paper reproduction).
+
+The paper uses ResNet-18 with GroupNorm on CIFAR; at simulation scale we use
+the same *structure class* — conv feature extractor with GroupNorm + a linear
+classifier head — shrunk to run 100 vmapped clients on CPU.  The partition
+into shared `u` (features) and personal `v` (classifier) follows the paper's
+"lower conv = feature extraction (shared), upper linear = pattern recognition
+(personal)" split.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import layers as L
+
+
+@dataclasses.dataclass(frozen=True)
+class CNNConfig:
+    image_size: int = 8
+    channels: int = 3
+    n_classes: int = 10
+    widths: Tuple[int, int] = (16, 32)
+    d_feature: int = 64
+    gn_groups: int = 4
+
+
+def _conv_init(key, shape):  # (kh, kw, cin, cout)
+    fan_in = shape[0] * shape[1] * shape[2]
+    return jax.random.normal(key, shape) / jnp.sqrt(fan_in)
+
+
+def init_params(key, cfg: CNNConfig):
+    ks = jax.random.split(key, 5)
+    c1, c2 = cfg.widths
+    feat_dim = c2 * (cfg.image_size // 4) ** 2
+    return {
+        "features": {
+            "conv1": _conv_init(ks[0], (3, 3, cfg.channels, c1)),
+            "gn1": jnp.ones((c1,)),
+            "gb1": jnp.zeros((c1,)),
+            "conv2": _conv_init(ks[1], (3, 3, c1, c2)),
+            "gn2": jnp.ones((c2,)),
+            "gb2": jnp.zeros((c2,)),
+            "dense": L.dense_init(ks[2], (feat_dim, cfg.d_feature), jnp.float32),
+        },
+        "classifier": {
+            "w": L.dense_init(ks[3], (cfg.d_feature, cfg.n_classes), jnp.float32),
+            "b": jnp.zeros((cfg.n_classes,)),
+        },
+    }
+
+
+def _gn(x, w, b, groups):
+    B, H, W, C = x.shape
+    xg = x.reshape(B, H, W, groups, C // groups)
+    mu = jnp.mean(xg, axis=(1, 2, 4), keepdims=True)
+    var = jnp.var(xg, axis=(1, 2, 4), keepdims=True)
+    xg = (xg - mu) * jax.lax.rsqrt(var + 1e-5)
+    return xg.reshape(B, H, W, C) * w + b
+
+
+def _conv(x, w):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+
+
+def features(p, x, cfg: CNNConfig):
+    """x: (B, H, W, C) -> (B, d_feature)."""
+    f = p["features"]
+    x = jax.nn.relu(_gn(_conv(x, f["conv1"]), f["gn1"], f["gb1"], cfg.gn_groups))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    x = jax.nn.relu(_gn(_conv(x, f["conv2"]), f["gn2"], f["gb2"], cfg.gn_groups))
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max, (1, 2, 2, 1),
+                              (1, 2, 2, 1), "VALID")
+    x = x.reshape(x.shape[0], -1)
+    return jax.nn.relu(x @ f["dense"])
+
+
+def logits_fn(p, x, cfg: CNNConfig):
+    h = features(p, x, cfg)
+    return h @ p["classifier"]["w"] + p["classifier"]["b"]
+
+
+def loss_fn(p, batch, cfg: CNNConfig):
+    lg = logits_fn(p, batch["x"], cfg)
+    return L.softmax_xent(lg, batch["y"])
+
+
+def accuracy(p, x, y, cfg: CNNConfig):
+    return jnp.mean((jnp.argmax(logits_fn(p, x, cfg), -1) == y).astype(jnp.float32))

@@ -1,0 +1,3 @@
+from .sgd import SGD, SGDState, exp_decay_schedule, clip_by_global_norm
+
+__all__ = ["SGD", "SGDState", "exp_decay_schedule", "clip_by_global_norm"]

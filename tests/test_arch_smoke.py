@@ -1,0 +1,147 @@
+"""Per-architecture smoke tests (deliverable f).
+
+Every assigned arch instantiates its REDUCED family variant (2 layers,
+d_model<=512, <=4 experts) and runs one forward + one DFedPGP train round +
+one decode step on CPU, asserting output shapes and no NaNs.  The FULL
+configs are exercised only by the dry-run (launch/dryrun.py).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.core import dfedpgp, partition, topology
+from repro.models import get_model, encdec, prefill_logits
+from repro.optim import SGD
+
+SEQ = 16
+B = 2
+
+
+def make_batch(cfg, lead=(B,), seq=SEQ):
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, lead + (seq,), 0, cfg.vocab, jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, -1)}
+    if cfg.family == "vlm":
+        batch["vision"] = jax.random.normal(
+            key, lead + (cfg.n_vision_tokens, cfg.d_model), jnp.float32)
+    if cfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            key, lead + (cfg.n_frames, cfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_limits(arch):
+    r = get_reduced(arch)
+    # hybrid keeps one full (lru, lru, attn) period + tail to exercise both
+    # block kinds; everything else is 2 layers.
+    max_layers = 5 if r.family == "hybrid" else 2
+    assert r.n_layers <= max_layers and r.d_model <= 512
+    assert r.n_experts <= 4
+    assert r.family == get_config(arch).family
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_full_config_matches_assignment(arch):
+    c = get_config(arch)
+    expected = {
+        "deepseek-moe-16b": (28, 2048, 16, 16, 1408, 102400),
+        "recurrentgemma-9b": (38, 4096, 16, 1, 12288, 256000),
+        "xlstm-125m": (12, 768, 4, 4, 0, 50304),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "codeqwen1.5-7b": (32, 4096, 32, 32, 13440, 92416),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "deepseek-v2-236b": (60, 5120, 128, 128, 1536, 102400),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "granite-3-2b": (40, 2048, 32, 8, 8192, 49155),
+        "qwen2-vl-7b": (28, 3584, 28, 4, 18944, 152064),
+    }[arch]
+    got = (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab)
+    assert got == expected, f"{arch}: {got} != {expected}"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_forward_and_loss(arch):
+    cfg = get_reduced(arch)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    loss = api.loss_fn(params, batch, cfg)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch} loss not finite"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_train_round(arch):
+    """One full DFedPGP round over 2 reduced clients."""
+    cfg = get_reduced(arch)
+    api = get_model(cfg)
+    m = 2
+    stacked = jax.vmap(lambda k: api.init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(0), m))
+    template = jax.tree.map(lambda x: x[0], stacked)
+    mask = partition.build_mask(template, partition.classifier_personal)
+    assert any(jax.tree.leaves(mask)), "no shared leaves"
+    assert not all(jax.tree.leaves(mask)), "no personal leaves"
+
+    opt = SGD(lr=0.01, momentum=0.9, weight_decay=5e-4)
+    algo = dfedpgp.DFedPGP(
+        loss_fn=lambda p, b: api.loss_fn(p, b, cfg), mask=mask,
+        opt_u=opt, opt_v=opt, k_v=1, k_u=1)
+    state = algo.init(stacked)
+    P = topology.directed_random(jax.random.PRNGKey(1), m, 1)
+    batches = {"v": make_batch(cfg, (m, 1, B)), "u": make_batch(cfg, (m, 1, B))}
+    new_state, metrics = jax.jit(algo.round_fn)(state, P, batches)
+    for k in ("loss_u", "loss_v"):
+        assert np.isfinite(float(metrics[k])), f"{arch} {k} not finite"
+    # params changed and are finite
+    moved = jax.tree.map(lambda a, b: float(jnp.abs(a - b).max()),
+                         new_state.params, state.params)
+    assert max(jax.tree.leaves(moved)) > 0
+    for leaf in jax.tree.leaves(new_state.params):
+        assert bool(jnp.all(jnp.isfinite(leaf))), f"{arch} non-finite params"
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_decode_step(arch):
+    cfg = get_reduced(arch)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    cache = api.init_cache(cfg, B, 32)
+    if cfg.family == "encdec":
+        frames = make_batch(cfg)["frames"]
+        cache = encdec.prefill_cross(params, frames, cfg, cache)
+    toks = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = api.decode_step(params, cache, toks, jnp.int32(0), cfg)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch} decode NaN"
+    # a second step at pos 1 must also be finite (cache update path)
+    logits2, _ = api.decode_step(params, cache2, toks, jnp.int32(1), cfg)
+    assert bool(jnp.all(jnp.isfinite(logits2)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_prefill_last_only(arch):
+    cfg = get_reduced(arch)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    batch = make_batch(cfg)
+    batch.pop("labels")
+    logits = prefill_logits(params, batch, cfg)
+    assert logits.shape == (B, 1, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+def test_param_count_sanity():
+    """Analytic param_count tracks the real reduced-model count within 25%
+    (used for MODEL_FLOPS = 6*N*D in the roofline)."""
+    for arch in ARCH_IDS:
+        cfg = get_reduced(arch)
+        api = get_model(cfg)
+        params = api.init_params(jax.random.PRNGKey(0), cfg)
+        real = sum(x.size for x in jax.tree.leaves(params))
+        est = cfg.param_count()
+        assert 0.6 < est / real < 1.67, \
+            f"{arch}: analytic {est} vs real {real}"

@@ -1,0 +1,148 @@
+"""Pallas kernel sweeps: shapes x dtypes, interpret mode vs ref.py oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref, ops
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.pushsum_mix import pushsum_mix_pallas
+from repro.kernels.rglru import rglru_pallas
+
+
+# ---------------------------------------------------------------------------
+# pushsum_mix
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,d", [(4, 64), (8, 100), (16, 513),
+                                 (100, 777), (3, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_pushsum_mix_sweep(m, d, dtype):
+    key = jax.random.PRNGKey(m * 1000 + d)
+    P = jax.random.dirichlet(key, jnp.ones((m,)), (m,))
+    U = jax.random.normal(jax.random.fold_in(key, 1), (m, d)).astype(dtype)
+    got = pushsum_mix_pallas(P, U, interpret=True)
+    want = ref.pushsum_mix_ref(P, U)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert got.dtype == U.dtype
+
+
+def test_pushsum_mix_row_stochastic_preserves_constant():
+    """P row-stochastic => mixing a constant vector is the identity."""
+    m = 16
+    P = jax.random.dirichlet(jax.random.PRNGKey(0), jnp.ones((m,)), (m,))
+    U = jnp.full((m, 256), 3.14159)
+    got = pushsum_mix_pallas(P, U, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 3.14159, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,H,Hkv,hd,window", [
+    (1, 128, 4, 4, 64, 0),      # MHA
+    (2, 256, 4, 2, 64, 0),      # GQA 2:1
+    (1, 256, 8, 1, 32, 0),      # MQA
+    (1, 256, 4, 2, 64, 64),     # sliding window
+    (1, 512, 2, 2, 128, 128),   # window = block
+    (2, 128, 2, 1, 128, 96),    # window not multiple of block
+])
+def test_flash_attention_sweep(B, S, H, Hkv, hd, window):
+    key = jax.random.PRNGKey(S + H)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32)
+    got = flash_attention_pallas(q, k, v, window=window, interpret=True,
+                                 bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v, window=window)
+    np.testing.assert_allclose(got, want, rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("dtype", [jnp.bfloat16])
+def test_flash_attention_bf16(dtype):
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 128, 4, 64)).astype(dtype)
+    k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dtype)
+    v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dtype)
+    got = flash_attention_pallas(q, k, v, interpret=True, bq=64, bk=64)
+    want = ref.flash_attention_ref(q, k, v)
+    assert got.dtype == dtype
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_matches_model_block_attention():
+    """kernel == layers.block_attention == full-matrix ref (same math)."""
+    from repro.models import layers as L
+    key = jax.random.PRNGKey(3)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (1, 256, 4, 64), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 256, 2, 64), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 256, 2, 64), jnp.float32)
+    a = flash_attention_pallas(q, k, v, interpret=True, bq=64, bk=64)
+    b = L.block_attention(q, k, v, q_block=64)
+    c = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(a, b, rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(b, c, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# rglru
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,W", [(1, 256, 128), (2, 512, 128),
+                                   (1, 1024, 256), (3, 256, 384)])
+def test_rglru_sweep(B, S, W):
+    key = jax.random.PRNGKey(B * S)
+    ks = jax.random.split(key, 2)
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))) * 0.98
+    b = jax.random.normal(ks[1], (B, S, W))
+    got = rglru_pallas(a, b, interpret=True)
+    want = ref.rglru_ref(a, b)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_rglru_matches_model_scan():
+    """Kernel recurrence == hybrid.py's associative_scan core."""
+    import jax.numpy as jnp
+    key = jax.random.PRNGKey(5)
+    ks = jax.random.split(key, 2)
+    B, S, W = 2, 256, 128
+    a = jax.nn.sigmoid(jax.random.normal(ks[0], (B, S, W))) * 0.99
+    b = jax.random.normal(ks[1], (B, S, W))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h_assoc = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h_kernel = rglru_pallas(a, b, interpret=True)
+    np.testing.assert_allclose(h_kernel, h_assoc, rtol=2e-4, atol=2e-4)
+
+
+def test_rglru_decay_bound():
+    """|h_t| stays bounded by sup|b|/(1-sup a) — recurrence stability."""
+    key = jax.random.PRNGKey(9)
+    a = jnp.full((1, 512, 128), 0.9)
+    b = jax.random.uniform(key, (1, 512, 128), minval=-1.0, maxval=1.0)
+    h = rglru_pallas(a, b, interpret=True)
+    assert float(jnp.abs(h).max()) <= 1.0 / (1 - 0.9) + 1e-3
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch
+# ---------------------------------------------------------------------------
+def test_ops_dispatch_cpu_uses_ref():
+    m, d = 8, 64
+    P = jax.random.dirichlet(jax.random.PRNGKey(0), jnp.ones((m,)), (m,))
+    U = jax.random.normal(jax.random.PRNGKey(1), (m, d))
+    np.testing.assert_allclose(ops.pushsum_mix(P, U),
+                               ref.pushsum_mix_ref(P, U), rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.pushsum_mix(P, U, force="pallas")),
+        np.asarray(ref.pushsum_mix_ref(P, U)), rtol=1e-5, atol=1e-5)

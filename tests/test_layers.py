@@ -1,0 +1,162 @@
+"""Model building blocks: blocked attention, RoPE/M-RoPE, MoE, losses."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import layers as L
+from repro.configs import get_reduced
+from repro.models import moe as moe_mod
+
+HS = hypothesis.settings(max_examples=8, deadline=None)
+
+
+def _qkv(key, B, S, H, Hkv, hd):
+    ks = jax.random.split(key, 3)
+    return (jax.random.normal(ks[0], (B, S, H, hd), jnp.float32),
+            jax.random.normal(ks[1], (B, S, Hkv, hd), jnp.float32),
+            jax.random.normal(ks[2], (B, S, Hkv, hd), jnp.float32))
+
+
+@pytest.mark.parametrize("window", [0, 48, 128])
+@pytest.mark.parametrize("S", [96, 256])
+def test_block_attention_equals_full(window, S):
+    q, k, v = _qkv(jax.random.PRNGKey(0), 2, S, 4, 2, 32)
+    mask = L.causal_mask(S, S, window=window)
+    want = L.gqa_attend(q, k, v, mask)
+    got = L.block_attention(q, k, v, window=window, q_block=64)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_block_attention_ragged_tail():
+    """S not a multiple of q_block."""
+    S = 200
+    q, k, v = _qkv(jax.random.PRNGKey(1), 1, S, 2, 1, 16)
+    want = L.gqa_attend(q, k, v, L.causal_mask(S, S))
+    got = L.block_attention(q, k, v, q_block=64)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+def test_attend_auto_dispatch():
+    """Long sequences take the blocked path — same values either way."""
+    S = L.BLOCK_ATTN_MIN_SEQ
+    q, k, v = _qkv(jax.random.PRNGKey(2), 1, S, 2, 2, 16)
+    got = L.attend_auto(q, k, v)
+    want = L.gqa_attend(q, k, v, L.causal_mask(S, S))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
+@hypothesis.given(pos=st.integers(0, 500))
+@HS
+def test_rope_relative_property(pos):
+    """RoPE: <R(p)q, R(p+k)v> depends only on the offset k."""
+    hd = 32
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (1, 1, 1, hd))
+    off = 7
+
+    def dot_at(p0):
+        qp = L.apply_rope(q, jnp.array([[p0]]), 10000.0)
+        kp = L.apply_rope(k, jnp.array([[p0 + off]]), 10000.0)
+        return float(jnp.sum(qp * kp))
+
+    np.testing.assert_allclose(dot_at(pos), dot_at(0), rtol=1e-4, atol=1e-4)
+
+
+def test_mrope_equals_rope_when_positions_equal():
+    """M-RoPE with identical (t,h,w) == plain RoPE (text-only decode)."""
+    hd, S = 32, 8
+    x = jax.random.normal(jax.random.PRNGKey(0), (1, S, 2, hd))
+    pos = jnp.arange(S, dtype=jnp.int32)[None, :]
+    pos3 = jnp.broadcast_to(pos, (3, 1, S))
+    a = L.apply_mrope(x, pos3, (4, 6, 6), 10000.0)
+    b = L.apply_rope(x, pos, 10000.0)
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+def test_decode_matches_train_attention():
+    """Token-by-token decode reproduces the training forward (dense)."""
+    from repro.models import dense, get_model
+    cfg = get_reduced("qwen2-0.5b")
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    S = 12
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab)
+    train_logits = dense.forward_train(params, toks, cfg)
+    cache = api.init_cache(cfg, 1, S)
+    outs = []
+    for t in range(S):
+        lg, cache = api.decode_step(params, cache, toks[:, t:t + 1],
+                                    jnp.int32(t), cfg)
+        outs.append(lg)
+    dec_logits = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(train_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_sliding_window_decode_ring_buffer():
+    """Windowed decode (ring buffer) == train attention with that window."""
+    from repro.models import dense, get_model
+    cfg = get_reduced("h2o-danube-1.8b").replace(window=8)
+    api = get_model(cfg)
+    params = api.init_params(jax.random.PRNGKey(0), cfg)
+    S = 20  # > 2x window: the ring buffer must wrap
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab)
+    train_logits = dense.forward_train(params, toks, cfg)
+    cache = api.init_cache(cfg, 1, S)
+    assert cache["k"].shape[2] == 8  # capacity = window
+    outs = []
+    for t in range(S):
+        lg, cache = api.decode_step(params, cache, toks[:, t:t + 1],
+                                    jnp.int32(t), cfg)
+        outs.append(lg)
+    dec = jnp.concatenate(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(train_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_moe_seq_chunking_equivalence():
+    cfg = get_reduced("deepseek-moe-16b")
+    api_params = moe_mod.init_moe_ffn(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
+    y1, a1 = moe_mod.moe_ffn(api_params, x, cfg.replace(moe_seq_chunk=0))
+    y2, a2 = moe_mod.moe_ffn(api_params, x, cfg.replace(moe_seq_chunk=4))
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_moe_routing_topk_weights():
+    """Each token's combined output uses exactly top_k renormalized experts."""
+    cfg = get_reduced("deepseek-moe-16b")
+    p = moe_mod.init_moe_ffn(jax.random.PRNGKey(2), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(3), (1, 8, cfg.d_model))
+    gates = x.reshape(-1, cfg.d_model) @ p["router"]
+    probs = jax.nn.softmax(gates, -1)
+    topv, topi = jax.lax.top_k(probs, cfg.top_k)
+    w = topv / topv.sum(-1, keepdims=True)
+    np.testing.assert_allclose(np.asarray(w.sum(-1)), 1.0, rtol=1e-5)
+
+
+def test_softmax_xent_ignore_index():
+    logits = jax.random.normal(jax.random.PRNGKey(0), (2, 4, 8))
+    labels = jnp.array([[1, 2, -100, 3], [-100, -100, 0, 1]])
+    loss = L.softmax_xent(logits, labels)
+    # manual
+    lf = np.asarray(jax.nn.log_softmax(logits, -1))
+    vals = []
+    for b in range(2):
+        for s in range(4):
+            if labels[b, s] != -100:
+                vals.append(-lf[b, s, labels[b, s]])
+    np.testing.assert_allclose(float(loss), np.mean(vals), rtol=1e-5)
+
+
+def test_rms_norm_properties():
+    x = jax.random.normal(jax.random.PRNGKey(0), (4, 64)) * 10
+    y = L.rms_norm(x, jnp.ones((64,)))
+    rms = np.asarray(jnp.sqrt(jnp.mean(y * y, -1)))
+    np.testing.assert_allclose(rms, 1.0, rtol=1e-3)

@@ -1,0 +1,67 @@
+"""Optimizer + checkpoint round-trip."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.optim import SGD, SGDState, clip_by_global_norm, exp_decay_schedule
+from repro.checkpoint import save_pytree, load_pytree
+
+
+def test_sgd_matches_manual():
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=0.01)
+    p = {"w": jnp.array([1.0, -2.0])}
+    s = opt.init(p)
+    g = {"w": jnp.array([0.5, 0.5])}
+    p1, s1 = opt.update(g, s, p)
+    gd = np.array([0.5, 0.5]) + 0.01 * np.array([1.0, -2.0])
+    m1 = 0.9 * 0.0 + gd
+    np.testing.assert_allclose(np.asarray(p1["w"]),
+                               np.array([1.0, -2.0]) - 0.1 * m1, rtol=1e-6)
+    p2, s2 = opt.update(g, s1, p1)
+    gd2 = np.array([0.5, 0.5]) + 0.01 * np.asarray(p1["w"])
+    m2 = 0.9 * m1 + gd2
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               np.asarray(p1["w"]) - 0.1 * m2, rtol=1e-6)
+
+
+def test_sgd_scalar_placeholder_grads_freeze_param():
+    """Scalar zero grads (masked part) leave params and momentum untouched
+    and never receive weight decay."""
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=0.1)
+    p = {"w": jnp.array([3.0, 4.0])}
+    s = SGDState({"w": jnp.zeros(())})
+    g = {"w": jnp.zeros(())}
+    p1, s1 = opt.update(g, s, p)
+    np.testing.assert_allclose(np.asarray(p1["w"]), [3.0, 4.0], atol=1e-7)
+    assert s1.momentum["w"].shape == ()
+
+
+def test_exp_decay():
+    sched = exp_decay_schedule(0.1, 0.99)
+    assert abs(sched(0) - 0.1) < 1e-9
+    assert abs(sched(10) - 0.1 * 0.99 ** 10) < 1e-9
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    np.testing.assert_allclose(float(norm), 20.0, rtol=1e-5)
+    np.testing.assert_allclose(
+        float(jnp.linalg.norm(clipped["a"])), 1.0, rtol=1e-5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"layers": [{"w": jnp.arange(6.0).reshape(2, 3)},
+                       {"w": jnp.ones((4,), jnp.bfloat16)}],
+            "mu": jnp.array(2.5)}
+    path = os.path.join(tmp_path, "ckpt")
+    save_pytree(path, tree, metadata={"round": 7})
+    template = jax.tree.map(jnp.zeros_like, tree)
+    back = load_pytree(path, template)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype

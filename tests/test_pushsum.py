@@ -1,0 +1,114 @@
+"""Push-sum + topology invariants (unit + hypothesis property tests)."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import topology
+from repro.core import pushsum  # noqa: F401  (import check)
+
+HS = hypothesis.settings(max_examples=10, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# mixing-matrix structure
+# ---------------------------------------------------------------------------
+@hypothesis.given(m=st.integers(3, 40), n=st.integers(1, 10),
+                  seed=st.integers(0, 2**31 - 1))
+@HS
+def test_directed_random_row_stochastic(m, n, seed):
+    P = topology.directed_random(jax.random.PRNGKey(seed), m, n)
+    np.testing.assert_allclose(np.asarray(P).sum(1), 1.0, atol=1e-5)
+    nn = min(n, m - 1)
+    # every row: self + n neighbors, uniform 1/(n+1)  (paper Formula 6)
+    counts = (np.asarray(P) > 0).sum(1)
+    np.testing.assert_array_equal(counts, nn + 1)
+    assert np.all(np.asarray(P).diagonal() > 0)
+
+
+@hypothesis.given(seed=st.integers(0, 2**31 - 1))
+@HS
+def test_undirected_random_doubly_stochastic(seed):
+    P = topology.undirected_random(jax.random.PRNGKey(seed), 20, 5)
+    P = np.asarray(P)
+    np.testing.assert_allclose(P.sum(0), 1.0, atol=1e-5)
+    np.testing.assert_allclose(P.sum(1), 1.0, atol=1e-5)
+    np.testing.assert_allclose(P, P.T, atol=1e-6)
+
+
+@hypothesis.given(logm=st.integers(2, 6))
+@HS
+def test_exponential_graph_B_connected(logm):
+    """Assumption 1: the union over a B=log2(m) window is strongly connected."""
+    m = 2 ** logm
+    Ps = [topology.directed_exponential(m, t) for t in range(logm)]
+    assert topology.union_strongly_connected(Ps)
+    for P in Ps:
+        np.testing.assert_allclose(np.asarray(P).sum(1), 1.0, atol=1e-6)
+
+
+def test_directed_random_strongly_connected_whp():
+    # n=10 neighbors over 100 clients: connected with overwhelming prob.
+    P = topology.directed_random(jax.random.PRNGKey(0), 100, 10)
+    assert topology.is_strongly_connected(P)
+
+
+# ---------------------------------------------------------------------------
+# push-sum de-biasing: z = u/mu reaches consensus = average
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make_P", [
+    lambda t, key: topology.directed_random(key, 16, 3),
+    lambda t, key: topology.directed_exponential(16, t),
+])
+def test_pushsum_consensus(make_P):
+    """Gossip-only (no gradients): z_i -> some consensus point; with
+    column-stochastic mixing the MASS sum(u) is conserved and the consensus
+    equals the initial average."""
+    m, d = 16, 5
+    key = jax.random.PRNGKey(1)
+    u = jax.random.normal(key, (m, d))
+    mu = jnp.ones((m,))
+    for t in range(120):
+        P = make_P(t, jax.random.fold_in(key, t))
+        u = P @ u
+        mu = P @ mu
+    z = u / mu[:, None]
+    # all clients agree
+    np.testing.assert_allclose(np.asarray(z - z[0]), 0.0, atol=1e-4)
+
+
+def test_pushsum_mass_conservation_column_stochastic():
+    m, d = 12, 4
+    key = jax.random.PRNGKey(2)
+    u0 = jax.random.normal(key, (m, d))
+    mu = jnp.ones((m,))
+    u = u0
+    for t in range(150):
+        P_row = topology.directed_random(jax.random.fold_in(key, t), m, 3)
+        P = topology.to_column_stochastic(P_row)
+        u = P @ u
+        mu = P @ mu
+    # column-stochastic: total mass conserved
+    np.testing.assert_allclose(np.asarray(u.sum(0)), np.asarray(u0.sum(0)),
+                               rtol=1e-4, atol=1e-4)
+    # de-biased consensus equals the true average (Kempe et al. 2003)
+    z = u / mu[:, None]
+    np.testing.assert_allclose(np.asarray(z), np.asarray(u0.mean(0))[None, :]
+                               .repeat(m, 0), atol=1e-3)
+
+
+@hypothesis.given(seed=st.integers(0, 1000))
+@HS
+def test_mu_stays_positive_and_bounded(seed):
+    """Proposition 2.1 [Taheri et al.]: mu bounded away from 0 and m."""
+    m = 16
+    mu = jnp.ones((m,))
+    key = jax.random.PRNGKey(seed)
+    for t in range(50):
+        P = topology.directed_random(jax.random.fold_in(key, t), m, 4)
+        mu = P @ mu
+        assert float(mu.min()) > 1e-3
+        assert float(mu.max()) < m
+        np.testing.assert_allclose(float(mu.sum()), m, rtol=2e-2)
