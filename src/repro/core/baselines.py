@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim import SGD, SGDState
-from . import local, partition
+from . import gossip, local, partition
 
 
 class SimpleState(NamedTuple):
@@ -71,9 +71,13 @@ def _sample(key, m, ratio):
     return jnp.zeros((m,)).at[jax.random.permutation(key, m)[:n_s]].set(1.0)
 
 
+# one gossip contraction: neighbor-indexed O(m*k*numel) for a
+# SparseTopology, dense einsum otherwise (single dispatch point in gossip)
+_mix_leaf = gossip.mix_any
+
+
 def _mix(P, stacked):
-    return jax.tree.map(
-        lambda a: jnp.einsum("mn,n...->m...", P.astype(a.dtype), a), stacked)
+    return jax.tree.map(lambda a: _mix_leaf(P, a), stacked)
 
 
 # ---------------------------------------------------------------------------
@@ -306,8 +310,8 @@ class DFedAvgM:
             params = _mix(P, params)
         else:
             params = jax.tree.map(
-                lambda a, mk: jnp.einsum("mn,n...->m...", P.astype(a.dtype), a)
-                if mk else a, params, self.partial_mask)
+                lambda a, mk: _mix_leaf(P, a) if mk else a,
+                params, self.partial_mask)
         return SimpleState(params, opt, state.round + 1), {"loss": jnp.mean(loss)}
 
     def eval_params(self, state):
@@ -361,7 +365,7 @@ class OSGP:
         params, opt, loss = jax.vmap(client)(
             state.params, state.mu, state.opt, batches, gate)
         params = _mix(P, params)
-        mu = jnp.einsum("mn,n->m", P, state.mu)
+        mu = _mix_leaf(P, state.mu)
         return OSGPState(params, mu, opt, state.round + 1), {
             "loss": jnp.mean(loss)}
 
@@ -426,8 +430,8 @@ class DisPFL:
 
         # masked aggregation: average only where neighbours have weights
         def agg(a, m):
-            num = jnp.einsum("mn,n...->m...", P.astype(a.dtype), a * m)
-            den = jnp.einsum("mn,n...->m...", P.astype(a.dtype), m)
+            num = _mix_leaf(P, a * m)
+            den = _mix_leaf(P, m)
             mixed = num / jnp.maximum(den, 1e-8)
             return jnp.where(m > 0, mixed, a)
 

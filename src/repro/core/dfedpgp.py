@@ -21,7 +21,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim import SGD, SGDState
-from . import local, partition, pushsum
+from . import gossip, local, partition, pushsum
 
 
 class DFedPGPState(NamedTuple):
@@ -53,6 +53,13 @@ class DFedPGP:
     # [ICML'20], which the paper cites for communication efficiency).
     # Push-sum tolerates the quantization: mu stays f32, z = u/mu de-biases.
     gossip_dtype: Optional[str] = None
+    # gossip engine for the push-pull transmission (docs/gossip.md):
+    #   "sparse" (default) — O(m*k*d) neighbor-indexed gather over the flat
+    #            shared buffer; needs a SparseTopology P (falls back to the
+    #            dense path when handed a dense matrix);
+    #   "dense"  — legacy per-leaf einsum against the (m, m) matrix;
+    #   "pallas" — the fused gossip_gather kernel (TPU; interpret on CPU).
+    gossip: str = "sparse"
 
     # ------------------------------------------------------------------
     def init(self, stacked_params) -> DFedPGPState:
@@ -133,9 +140,10 @@ class DFedPGP:
         return params, opt_u, opt_v, (loss_v, loss_u)
 
     # ------------------------------------------------------------------
-    def round_fn(self, state: DFedPGPState, P: jnp.ndarray, batches,
-                 step_gate_u=None):
+    def round_fn(self, state: DFedPGPState, P, batches, step_gate_u=None):
         """batches: {'v': leaves (m, K_v, B, ...), 'u': leaves (m, K_u, B, ...)}.
+        P: the round's mixing pattern — a topology.SparseTopology (preferred;
+        enables the O(m*k*d) gossip engines) or a dense (m, m) matrix.
         step_gate_u: optional (m, K_u) gates for computation heterogeneity."""
         lr_scale = self.lr_decay ** state.round.astype(jnp.float32)
         if step_gate_u is None:
@@ -151,17 +159,9 @@ class DFedPGP:
         if self.mix_fn is not None:
             params, mu = self.mix_fn(params, state.mu, state.round, P)
         else:
-            gdt = jnp.dtype(self.gossip_dtype) if self.gossip_dtype else None
-
-            def mix_leaf(a, m):
-                if not m:
-                    return a
-                w = a.astype(gdt) if gdt is not None else a
-                return jnp.einsum("mn,n...->m...", P.astype(w.dtype), w
-                                  ).astype(a.dtype)
-
-            params = jax.tree.map(mix_leaf, params, self.mask)
-            mu = jnp.einsum("mn,n->m", P, state.mu)
+            params, mu = gossip.gossip_mix(
+                params, state.mu, P, self.mask, mode=self.gossip,
+                wire_dtype=self.gossip_dtype)
 
         new_state = DFedPGPState(params, mu, opt_u, opt_v, state.round + 1)
         metrics = {"loss_v": jnp.mean(loss_v), "loss_u": jnp.mean(loss_u),

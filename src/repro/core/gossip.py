@@ -1,0 +1,143 @@
+"""Sparse gossip engine: neighbor-indexed push-pull over a flat buffer.
+
+The round's transmission  U'[i] = sum_j P[i,j] * U[j]  only touches each
+client's k = n+1 in-neighbors, so contracting a dense (m, m) matrix against
+every parameter leaf is O(m^2 * d) work for an O(m*k*d) operation.  This
+module provides the O(m*k*d) path (docs/gossip.md):
+
+1. `mix_rows(idx, w, x)` — the gather-weighted-sum primitive, unrolled over
+   the (small, static) neighbor axis: k row-gathers + fused axpys.  On CPU
+   at m=1024, k=8 this is ~11x faster than the dense matmul (measured:
+   BENCH_gossip.json); on TPU the same contraction is the Pallas kernel
+   `kernels/gossip_gather.py`.
+2. `flatten_shared` / `unflatten_shared` — ravel all shared-part leaves of
+   the stacked client pytree into ONE (m, d_flat) buffer so a round's
+   push-pull is a single gather-mix (one kernel launch) plus the (m,) mu
+   update, instead of one contraction per leaf.  The tree form is rebuilt
+   lazily, only for local SGD / eval; under jit the reshape/concat pair
+   fuses and the asymptotic win is the gather.
+3. `gossip_mix` — the round-level entry point used by `DFedPGP.round_fn`,
+   `pushsum.mix` and the DFL baselines, behind the `gossip=` knob:
+     "dense"  — legacy per-leaf einsum against the (m, m) matrix;
+     "sparse" — flat-buffer gather-mix (default; numerics-identical to
+                dense within f32 tolerance);
+     "pallas" — flat-buffer mix through the fused gossip_gather kernel
+                (compiled on TPU, interpret mode elsewhere — validation
+                path, not a CPU fast path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import partition
+from .topology import SparseTopology
+
+MODES = ("dense", "sparse", "pallas")
+
+
+def mix_rows(idx: jnp.ndarray, w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = sum_j w[i,j] * x[idx[i,j]] for stacked x: (m,) or (m, ...).
+
+    Unrolled over the static neighbor axis k: the XLA CPU/TPU backends turn
+    each term into a row-gather + fused multiply-add, with no (m, k, d)
+    intermediate and no O(m^2) matrix."""
+    k = idx.shape[1]
+    bshape = (-1,) + (1,) * (x.ndim - 1)
+
+    def term(j):
+        return w[:, j].reshape(bshape).astype(x.dtype) * \
+            jnp.take(x, idx[:, j], axis=0)
+
+    out = term(0)
+    for j in range(1, k):
+        out = out + term(j)
+    return out
+
+
+def mix_any(P, x: jnp.ndarray) -> jnp.ndarray:
+    """One gossip contraction of stacked per-client values x with either
+    topology representation: neighbor-indexed O(m*k*numel) for a
+    SparseTopology, dense einsum otherwise.  The single dispatch point for
+    pushsum.mix, the DFL baselines and SparseTopology.__matmul__."""
+    if isinstance(P, SparseTopology):
+        return mix_rows(P.idx, P.w, x)
+    return jnp.einsum("mn,n...->m...", P.astype(x.dtype), x)
+
+
+# ---------------------------------------------------------------------------
+# flat-buffer layout
+# ---------------------------------------------------------------------------
+def flat_width(params, mask) -> int:
+    """d_flat: total shared parameters per client."""
+    return partition.count_params(jax.tree.map(lambda a: a[0], params),
+                                  mask, shared=True)
+
+
+def flatten_shared(params, mask, dtype=None) -> jnp.ndarray:
+    """Ravel the shared leaves of a stacked (m, ...) pytree into one
+    (m, d_flat) buffer (leaf order = treedef order, the wire layout in
+    docs/gossip.md).  `dtype` is the wire dtype (e.g. bfloat16 halves the
+    gossip bytes); defaults to the leaves' common dtype."""
+    u, _ = partition.split(params, mask)
+    leaves = jax.tree.leaves(u)
+    m = leaves[0].shape[0]
+    dt = jnp.dtype(dtype) if dtype is not None else jnp.result_type(*leaves)
+    return jnp.concatenate([l.reshape(m, -1).astype(dt) for l in leaves],
+                           axis=1)
+
+
+def unflatten_shared(flat: jnp.ndarray, params, mask):
+    """Inverse of flatten_shared: slice the (m, d_flat) buffer back into the
+    shared leaves (cast to each leaf's dtype); personal leaves pass through
+    from `params` untouched."""
+    u, v = partition.split(params, mask)
+    leaves, treedef = jax.tree.flatten(u)
+    out, off = [], 0
+    for l in leaves:
+        n = l[0].size
+        out.append(flat[:, off:off + n].reshape(l.shape).astype(l.dtype))
+        off += n
+    return partition.merge(jax.tree.unflatten(treedef, out), v)
+
+
+# ---------------------------------------------------------------------------
+# round-level entry point
+# ---------------------------------------------------------------------------
+def gossip_mix(params, mu, P, mask, *, mode: str = "sparse",
+               wire_dtype=None):
+    """One push-pull transmission of the shared part + the mu update.
+
+    P is a SparseTopology (preferred) or a dense (m, m) row-stochastic
+    matrix.  A sparse/pallas mode with a dense P falls back to the dense
+    path — the neighbor indices are not recoverable inside jit.  Returns
+    (params', mu'); mu always mixes in f32 (push-sum de-bias correctness).
+    """
+    if mode not in MODES:
+        raise ValueError(f"gossip mode {mode!r}; known: {MODES}")
+    sparse = isinstance(P, SparseTopology)
+    if sparse and not any(jax.tree.leaves(mask)):
+        # degenerate all-personal mask: nothing to flatten — only mu moves
+        return params, mix_rows(P.idx, P.w, mu)
+    if mode == "dense" or not sparse:
+        Pd = P.dense() if sparse else P
+        gdt = jnp.dtype(wire_dtype) if wire_dtype is not None else None
+
+        def mix_leaf(a, mk):
+            if not mk:
+                return a
+            x = a.astype(gdt) if gdt is not None else a
+            return jnp.einsum("mn,n...->m...", Pd.astype(x.dtype), x
+                              ).astype(a.dtype)
+
+        return (jax.tree.map(mix_leaf, params, mask),
+                jnp.einsum("mn,n->m", Pd, mu))
+
+    flat = flatten_shared(params, mask, dtype=wire_dtype)
+    if mode == "pallas":
+        from repro.kernels import ops
+        mixed = ops.gossip_gather(P.idx, P.w, flat, force="pallas")
+    else:
+        mixed = mix_rows(P.idx, P.w, flat)
+    return (unflatten_shared(mixed, params, mask),
+            mix_rows(P.idx, P.w, mu))

@@ -12,13 +12,20 @@ import jax.numpy as jnp
 
 from repro.kernels import ops
 from . import partition
+from .topology import SparseTopology
 
 
 def make_kernel_mix(mask, force: str = "auto"):
-    """-> mix_fn(params, mu, rnd, P) for DFedPGP(mix_fn=...)."""
+    """-> mix_fn(params, mu, rnd, P) for DFedPGP(mix_fn=...).
+
+    This is the DENSE (m, m) MXU path; it densifies a SparseTopology P.
+    For the O(m*k*d) neighbor-indexed path use gossip="sparse"/"pallas"
+    on DFedPGP directly (docs/gossip.md)."""
 
     def mix(params, mu, rnd, P):
         del rnd
+        if isinstance(P, SparseTopology):
+            P = P.dense()
         u, v = partition.split(params, mask)
         leaves, treedef = jax.tree.flatten(u)
         m = leaves[0].shape[0]

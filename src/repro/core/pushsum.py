@@ -13,6 +13,8 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from . import gossip
+
 
 class PushSumState(NamedTuple):
     u: Any              # stacked shared params, leaves (m, ...)
@@ -24,13 +26,14 @@ def init_state(u_stacked) -> PushSumState:
     return PushSumState(u_stacked, jnp.ones((m,), jnp.float32))
 
 
-def mix(P: jnp.ndarray, state: PushSumState) -> PushSumState:
-    """One push-pull transmission: u <- P u, mu <- P mu."""
-    def mix_leaf(a):
-        return jnp.einsum("mn,n...->m...", P.astype(a.dtype), a)
+def mix(P, state: PushSumState) -> PushSumState:
+    """One push-pull transmission: u <- P u, mu <- P mu.
 
-    return PushSumState(jax.tree.map(mix_leaf, state.u),
-                        jnp.einsum("mn,n->m", P, state.mu))
+    P: SparseTopology (O(m*k*numel) neighbor-indexed gather) or a dense
+    (m, m) matrix (legacy O(m^2*numel) contraction)."""
+    return PushSumState(
+        jax.tree.map(lambda a: gossip.mix_any(P, a), state.u),
+        gossip.mix_any(P, state.mu))
 
 
 def debias(state: PushSumState):

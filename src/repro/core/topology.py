@@ -10,89 +10,182 @@ Mixing-matrix conventions (paper Appendix B):
 
 Either way the push-sum weight mu de-biases the non-doubly-stochastic mixing:
 z_i = u_i / mu_i converges to a common consensus point.
+
+Sparse-first representation (docs/gossip.md): every constructor returns a
+`SparseTopology` — per-client in-neighbor indices (m, k) and pull weights
+(m, k) — because the paper's graphs have k = n+1 << m in-edges per client.
+The gossip engines contract against the indices in O(m*k*d) instead of
+materializing the O(m^2) matrix; `.dense()` recovers the (m, m) matrix for
+baselines, diagnostics, and parity tests.
 """
 from __future__ import annotations
+
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+class SparseTopology(NamedTuple):
+    """Neighbor-indexed row-stochastic mixing pattern.
+
+    idx: (m, k) int32 — in-neighbor ids of each client (self included).
+         Rows with fewer than k in-edges are padded with the row's own id.
+    w:   (m, k) float32 — pull weights; padding entries carry weight 0, so
+         each row sums to 1 over its real edges.
+
+    A NamedTuple, hence a pytree: it passes through jit/vmap boundaries and
+    its (idx, w) leaves are donated/sharded like any other array pair.
+    """
+    idx: jnp.ndarray
+    w: jnp.ndarray
+
+    @property
+    def m(self) -> int:
+        return self.idx.shape[0]
+
+    @property
+    def k(self) -> int:
+        return self.idx.shape[1]
+
+    def dense(self) -> jnp.ndarray:
+        """Materialize the (m, m) row-stochastic matrix (diagnostics only —
+        the gossip hot path never calls this)."""
+        m = self.idx.shape[0]
+        rows = jnp.arange(m)[:, None]
+        return jnp.zeros((m, m), self.w.dtype).at[rows, self.idx].add(self.w)
+
+    def __matmul__(self, x):
+        """P @ x without densifying: out[i] = sum_j w[i,j] * x[idx[i,j]].
+        x: (m,) or (m, ...) stacked per-client values."""
+        from . import gossip  # local import: gossip imports this module
+        return gossip.mix_rows(self.idx, self.w, jnp.asarray(x))
+
+
+def from_dense(P, k: int | None = None) -> SparseTopology:
+    """Host-side conversion of a dense row-stochastic matrix.  k defaults to
+    the maximum number of nonzeros in any row; rows with fewer edges are
+    padded with (self, 0)."""
+    Pn = np.asarray(P, np.float32)
+    m = Pn.shape[0]
+    nnz = int((Pn > 0).sum(1).max()) if m else 0
+    k = max(nnz, 1) if k is None else k
+    if nnz > k:
+        raise ValueError(f"k={k} < max row nnz {nnz}")
+    order = np.argsort(-Pn, axis=1, kind="stable")[:, :k]
+    w = np.take_along_axis(Pn, order, axis=1)
+    idx = np.where(w > 0, order, np.arange(m)[:, None])
+    return SparseTopology(jnp.asarray(idx, jnp.int32),
+                          jnp.asarray(w, jnp.float32))
+
+
+def densify(P) -> jnp.ndarray:
+    """Accept either representation; return the dense (m, m) matrix."""
+    return P.dense() if isinstance(P, SparseTopology) else jnp.asarray(P)
+
+
 # ---------------------------------------------------------------------------
 # directed graphs
 # ---------------------------------------------------------------------------
-def directed_random(key, m: int, n_neighbors: int) -> jnp.ndarray:
+def directed_random(key, m: int, n_neighbors: int) -> SparseTopology:
     """Paper's topology: every client pulls from `n` uniform random
-    in-neighbors plus itself; uniform weights 1/(n+1).  Row-stochastic."""
+    in-neighbors plus itself; uniform weights 1/(n+1).  Row-stochastic;
+    k = n+1."""
     n = min(n_neighbors, m - 1)
-    # sample n distinct non-self neighbors per row via random permutation
     keys = jax.random.split(key, m)
 
     def row(i, k):
         perm = jax.random.permutation(k, m - 1)[:n]
         nb = jnp.where(perm >= i, perm + 1, perm)          # skip self
-        r = jnp.zeros((m,)).at[nb].set(1.0 / (n + 1))
-        return r.at[i].set(1.0 / (n + 1))
+        return jnp.concatenate([i[None], nb])              # self first
 
-    return jax.vmap(row)(jnp.arange(m), keys)
+    idx = jax.vmap(row)(jnp.arange(m), keys)
+    w = jnp.full((m, n + 1), 1.0 / (n + 1), jnp.float32)
+    return SparseTopology(idx.astype(jnp.int32), w)
 
 
-def directed_exponential(m: int, round_idx) -> jnp.ndarray:
+def directed_exponential(m: int, round_idx) -> SparseTopology:
     """One-peer exponential graph (SGP, arXiv:1811.10792): at round t each
     client pulls from the single peer at offset 2^(t mod log2 m).
-    Row-stochastic with weights (1/2, 1/2).  B-strongly-connected with
-    B = log2(m)."""
+    Row-stochastic with weights (1/2, 1/2), k = 2.  B-strongly-connected
+    with B = log2(m)."""
     assert m & (m - 1) == 0, "exponential graph wants power-of-two m"
     log_m = max(int(np.log2(m)), 1)
     offset = 2 ** jnp.mod(jnp.asarray(round_idx), log_m)
     rows = jnp.arange(m)
     src = jnp.mod(rows - offset, m)
-    P = jnp.zeros((m, m)).at[rows, src].set(0.5).at[rows, rows].add(0.5)
-    return P
+    idx = jnp.stack([rows, src], axis=1).astype(jnp.int32)
+    return SparseTopology(idx, jnp.full((m, 2), 0.5, jnp.float32))
 
 
-def ring(m: int) -> jnp.ndarray:
+def ring(m: int) -> SparseTopology:
     rows = jnp.arange(m)
-    P = jnp.zeros((m, m)).at[rows, jnp.mod(rows - 1, m)].set(0.5)
-    return P.at[rows, rows].add(0.5)
+    idx = jnp.stack([rows, jnp.mod(rows - 1, m)], axis=1).astype(jnp.int32)
+    return SparseTopology(idx, jnp.full((m, 2), 0.5, jnp.float32))
 
 
 def fully_connected(m: int) -> jnp.ndarray:
+    # k = m: nothing to gain from the sparse form — stays dense.
     return jnp.full((m, m), 1.0 / m)
 
 
-def to_column_stochastic(P_row: jnp.ndarray) -> jnp.ndarray:
+def to_column_stochastic(P_row) -> jnp.ndarray:
     """Turn a pull (row-stochastic) pattern into the equivalent push
-    (column-stochastic) matrix over the transposed edge set."""
+    (column-stochastic) matrix over the transposed edge set.
+
+    Nodes with no out-edges under the transposed pattern (zero columns —
+    possible for asymmetric patterns without self-loops) keep their mass on
+    a self-loop instead of producing a 0/0 NaN column."""
+    P_row = densify(P_row)
+    m = P_row.shape[0]
     A = (P_row > 0).astype(jnp.float32).T                  # out-edges of each col
+    col = jnp.sum(A, axis=0, keepdims=True)
+    A = A + jnp.eye(m, dtype=A.dtype) * (col == 0)
     return A / jnp.sum(A, axis=0, keepdims=True)
 
 
 # ---------------------------------------------------------------------------
 # undirected graphs (for DFedAvgM / Dis-PFL baselines)
 # ---------------------------------------------------------------------------
-def undirected_random(key, m: int, n_neighbors: int) -> jnp.ndarray:
+def undirected_random(key, m: int, n_neighbors: int) -> SparseTopology:
     """Symmetric doubly-stochastic matrix via Metropolis-Hastings weights on a
-    random undirected n-regular-ish graph (paper's undirected baseline)."""
+    random undirected n-regular-ish graph (paper's undirected baseline).
+
+    Fully vectorized host-side construction (no Python loop over m), so
+    m=1024 topologies build in milliseconds.  The in-degree is capped at
+    dmax = min(3n, m-1) — symmetric truncation of the (rare) tail where a
+    node is picked by many peers — so the sparse width k = dmax+1 is a
+    deterministic function of (m, n) and jitted round functions never
+    retrace across rounds."""
     n = min(n_neighbors, m - 1)
-    # symmetric adjacency: union of each node's n random picks
-    picks = directed_random(key, m, n) > 0
-    adj = np.array(picks | picks.T)    # writable host copy
-    np.fill_diagonal(adj, False)
-    deg = adj.sum(1)
-    W = np.zeros((m, m))
-    for i in range(m):
-        for j in np.nonzero(adj[i])[0]:
-            W[i, j] = 1.0 / (max(deg[i], deg[j]) + 1.0)
-        W[i, i] = 1.0 - W[i].sum()
-    return jnp.asarray(W, jnp.float32)
+    picks = np.asarray(directed_random(key, m, n).idx)     # (m, n+1), col 0=self
+    A = np.zeros((m, m), bool)
+    np.put_along_axis(A, picks, True, axis=1)
+    A |= A.T
+    np.fill_diagonal(A, False)
+
+    dmax = max(min(3 * n, m - 1), 1)
+    pos = A.cumsum(1) - 1                 # rank of each edge within its row
+    keep = A & (pos < dmax) & (pos.T < dmax)   # symmetric cap
+    deg = keep.sum(1)
+    W = np.where(keep,
+                 1.0 / (np.maximum(deg[:, None], deg[None, :]) + 1.0), 0.0)
+    np.fill_diagonal(W, 1.0 - W.sum(1))
+
+    k = min(dmax + 1, m)
+    order = np.argpartition(-W, kth=k - 1, axis=1)[:, :k]
+    w = np.take_along_axis(W, order, axis=1)
+    idx = np.where(w > 0, order, np.arange(m)[:, None])
+    return SparseTopology(jnp.asarray(idx, jnp.int32),
+                          jnp.asarray(w, jnp.float32))
 
 
 # ---------------------------------------------------------------------------
-# diagnostics (numpy; used by tests and EXPERIMENTS)
+# diagnostics (numpy; used by tests and EXPERIMENTS.md)
 # ---------------------------------------------------------------------------
 def is_strongly_connected(P) -> bool:
-    A = np.asarray(P) > 0
+    A = np.asarray(densify(P)) > 0
     m = A.shape[0]
     reach = np.eye(m, dtype=bool) | A
     for _ in range(int(np.ceil(np.log2(max(m, 2))))):
@@ -103,7 +196,7 @@ def is_strongly_connected(P) -> bool:
 def union_strongly_connected(Ps) -> bool:
     """Assumption 1 (B-bounded connectivity): is the union graph of a window
     of mixing matrices strongly connected?"""
-    U = np.zeros_like(np.asarray(Ps[0]))
+    U = np.zeros_like(np.asarray(densify(Ps[0])))
     for P in Ps:
-        U = U + np.asarray(P)
+        U = U + np.asarray(densify(P))
     return is_strongly_connected(U)

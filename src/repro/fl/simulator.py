@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import baselines, dfedpgp, partition, topology
+from repro.core import baselines, dfedpgp, gossip, partition, topology
 from repro.data import make_dataset, sample_batches, ClientData
 from repro.models import cnn
 from repro.optim import SGD
@@ -46,6 +46,10 @@ class SimConfig:
     noise: float = 0.7              # synthetic-data noise (task difficulty)
     seed: int = 0
     topology: str = "random"        # random | exponential | ring
+    # dense | sparse | pallas (docs/gossip.md).  dense/sparse apply to every
+    # DFL method; "pallas" selects the fused kernel for DFedPGP's flat-buffer
+    # engine — the baselines have no flat buffer and gossip sparse.
+    gossip: str = "sparse"
 
 
 # algo name -> (constructor kind, context kind)
@@ -84,23 +88,36 @@ def build_algorithm(name: str, loss_fn, mask, sim: SimConfig):
     if name == "dfedpgp":
         return dfedpgp.DFedPGP(
             loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
-            k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay)
+            k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay,
+            gossip=sim.gossip)
     raise ValueError(f"unknown algorithm {name!r}; known: {ALGOS}")
 
 
 def make_mixing(name: str, key, sim: SimConfig, round_idx: int):
+    """The round's mixing pattern, neighbor-indexed (SparseTopology).
+    With sim.gossip == "dense" it is densified here, so the round functions
+    exercise the legacy O(m^2) einsum path."""
     if name in UNDIRECTED:
-        return topology.undirected_random(key, sim.m, sim.n_neighbors)
-    if sim.topology == "exponential":
-        return topology.directed_exponential(sim.m, round_idx)
-    if sim.topology == "ring":
-        return topology.ring(sim.m)
-    return topology.directed_random(key, sim.m, sim.n_neighbors)
+        topo = topology.undirected_random(key, sim.m, sim.n_neighbors)
+    elif sim.topology == "exponential":
+        topo = topology.directed_exponential(sim.m, round_idx)
+    elif sim.topology == "ring":
+        topo = topology.ring(sim.m)
+    else:
+        topo = topology.directed_random(key, sim.m, sim.n_neighbors)
+    return topo.dense() if sim.gossip == "dense" else topo
+
+
+@functools.lru_cache(maxsize=None)
+def _accuracy_fn(model_cfg: cnn.CNNConfig):
+    """One jitted, vmapped accuracy closure per model config — built once
+    per experiment so eval rounds stop paying per-call retrace overhead."""
+    return jax.jit(jax.vmap(
+        lambda p, x, y: cnn.accuracy(p, x, y, model_cfg)))
 
 
 def evaluate(eval_params, data: ClientData, model_cfg: cnn.CNNConfig):
-    acc = jax.vmap(lambda p, x, y: cnn.accuracy(p, x, y, model_cfg))(
-        eval_params, data.x_test, data.y_test)
+    acc = _accuracy_fn(model_cfg)(eval_params, data.x_test, data.y_test)
     return float(jnp.mean(acc)), np.asarray(acc)
 
 
@@ -127,7 +144,12 @@ def run_experiment(algo_name: str, sim: SimConfig,
     stacked = jax.vmap(lambda k: cnn.init_params(k, model_cfg))(
         jax.random.split(k_init, sim.m))
 
+    if sim.gossip not in gossip.MODES:
+        raise ValueError(f"gossip mode {sim.gossip!r}; known: {gossip.MODES}")
     algo = build_algorithm(algo_name, loss_fn, mask, sim)
+    if sim.gossip == "pallas" and algo_name != "dfedpgp":
+        print(f"[simulator] note: gossip='pallas' applies to dfedpgp's "
+              f"flat-buffer engine; {algo_name} gossips via the sparse path")
     state = algo.init(stacked)
 
     k_total = sim.k_local + sim.k_personal

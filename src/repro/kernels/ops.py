@@ -15,6 +15,7 @@ import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_pallas
+from .gossip_gather import gossip_gather_pallas
 from .pushsum_mix import pushsum_mix_pallas
 from .rglru import rglru_pallas
 
@@ -29,6 +30,17 @@ def pushsum_mix(P, U, force: str = "auto"):
     if force == "pallas" or (force == "auto" and _on_tpu()):
         return pushsum_mix_pallas(P, U, interpret=not _on_tpu())
     return ref.pushsum_mix_ref(P, U)
+
+
+@functools.partial(jax.jit, static_argnames=("force",))
+def gossip_gather(idx, w, U, force: str = "auto"):
+    """out[i] = sum_j w[i,j] * U[idx[i,j]] — the sparse gossip transmission
+    over the flat client buffer. force: auto|pallas|ref.  On CPU, `auto`
+    uses the jnp oracle; `pallas` runs the kernel in interpret mode (slow,
+    validation only)."""
+    if force == "pallas" or (force == "auto" and _on_tpu()):
+        return gossip_gather_pallas(idx, w, U, interpret=not _on_tpu())
+    return ref.gossip_gather_ref(idx, w, U)
 
 
 def flash_attention(q, k, v, *, window: int = 0, scale=None,

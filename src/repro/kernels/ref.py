@@ -16,6 +16,13 @@ def pushsum_mix_ref(P: jnp.ndarray, U: jnp.ndarray) -> jnp.ndarray:
     return (P.astype(jnp.float32) @ U.astype(jnp.float32)).astype(U.dtype)
 
 
+def gossip_gather_ref(idx: jnp.ndarray, w: jnp.ndarray,
+                      U: jnp.ndarray) -> jnp.ndarray:
+    """out[i] = sum_j w[i,j] * U[idx[i,j]] — the sparse gossip oracle."""
+    G = jnp.take(U, idx, axis=0).astype(jnp.float32)       # (m, k, d)
+    return jnp.einsum("mk,mkd->md", w.astype(jnp.float32), G).astype(U.dtype)
+
+
 def flash_attention_ref(q, k, v, *, window: int = 0, scale=None):
     """Causal (optionally sliding-window) GQA attention, full-matrix math."""
     B, S, H, hd = q.shape

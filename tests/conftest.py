@@ -5,6 +5,43 @@ import pytest
 # dry-run, forces 512 host devices — see launch/dryrun.py).
 jax.config.update("jax_enable_x64", False)
 
+# Some modules mix hypothesis property tests with plain pytest tests.  On
+# images that don't ship hypothesis, install a minimal shim so the modules
+# still import: @given tests are marked skipped, every plain test in the
+# same file keeps running (instead of the whole module erroring at
+# collection).  Only the API surface the tests use is stubbed.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import sys
+    import types
+
+    def _strategy(*_a, **_k):
+        return None
+
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _strategy
+    _st.sampled_from = _strategy
+
+    def _given(*_a, **_k):
+        def deco(f):
+            return pytest.mark.skip(reason="hypothesis not installed")(f)
+        return deco
+
+    class _settings:
+        def __init__(self, *_a, **_k):
+            pass
+
+        def __call__(self, f):
+            return f
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st
+
 
 @pytest.fixture(scope="session")
 def rng():

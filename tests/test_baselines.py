@@ -70,7 +70,7 @@ def test_dfedavgm_undirected_mixing():
     new, _ = algo.round_fn(state, W, batch)
     for k in ("features",):
         for name, leaf in new.params[k].items():
-            want = np.einsum("mn,n...->m...", np.asarray(W),
+            want = np.einsum("mn,n...->m...", np.asarray(W.dense()),
                              np.asarray(stacked[k][name]))
             np.testing.assert_allclose(np.asarray(leaf), want, rtol=1e-4,
                                        atol=1e-5)

@@ -6,6 +6,7 @@ import pytest
 
 from repro.kernels import ref, ops
 from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.gossip_gather import gossip_gather_pallas
 from repro.kernels.pushsum_mix import pushsum_mix_pallas
 from repro.kernels.rglru import rglru_pallas
 
@@ -14,7 +15,8 @@ from repro.kernels.rglru import rglru_pallas
 # pushsum_mix
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("m,d", [(4, 64), (8, 100), (16, 513),
-                                 (100, 777), (3, 2048)])
+                                 (100, 777), (3, 2048),
+                                 (7, 129), (13, 33), (9, 511)])
 @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
 def test_pushsum_mix_sweep(m, d, dtype):
     key = jax.random.PRNGKey(m * 1000 + d)
@@ -36,6 +38,62 @@ def test_pushsum_mix_row_stochastic_preserves_constant():
     U = jnp.full((m, 256), 3.14159)
     got = pushsum_mix_pallas(P, U, interpret=True)
     np.testing.assert_allclose(np.asarray(got), 3.14159, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# gossip_gather — the sparse neighbor-indexed mix (docs/gossip.md)
+# ---------------------------------------------------------------------------
+def _sparse_mix_inputs(m, k, d, dtype):
+    key = jax.random.PRNGKey(m * 100 + k * 10 + d)
+    idx = jax.random.randint(key, (m, k), 0, m, jnp.int32)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (m, k))
+    w = w / w.sum(1, keepdims=True)
+    U = jax.random.normal(jax.random.fold_in(key, 2), (m, d)).astype(dtype)
+    return idx, w, U
+
+
+# m not a multiple of 8, d not a multiple of 512, k odd / k=1 edge
+@pytest.mark.parametrize("m,k,d", [(5, 2, 64), (33, 4, 1100), (100, 11, 513),
+                                   (8, 1, 512), (17, 3, 129), (64, 8, 2048)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_gossip_gather_sweep(m, k, d, dtype):
+    idx, w, U = _sparse_mix_inputs(m, k, d, dtype)
+    got = gossip_gather_pallas(idx, w, U, interpret=True)
+    want = ref.gossip_gather_ref(idx, w, U)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+    assert got.dtype == U.dtype
+
+
+def test_gossip_gather_row_stochastic_preserves_constant():
+    """Row-stochastic weights => mixing a constant buffer is the identity."""
+    idx, w, _ = _sparse_mix_inputs(16, 4, 384, jnp.float32)
+    U = jnp.full((16, 384), 2.71828)
+    got = gossip_gather_pallas(idx, w, U, interpret=True)
+    np.testing.assert_allclose(np.asarray(got), 2.71828, rtol=1e-5)
+
+
+def test_gossip_gather_matches_dense_matrix():
+    """The kernel on a SparseTopology == the dense pushsum contraction."""
+    from repro.core import topology
+    topo = topology.directed_random(jax.random.PRNGKey(3), 12, 4)
+    U = jax.random.normal(jax.random.PRNGKey(4), (12, 700))
+    got = gossip_gather_pallas(topo.idx, topo.w, U, interpret=True)
+    want = ref.pushsum_mix_ref(topo.dense(), U)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_gossip_gather_ops_dispatch():
+    idx, w, U = _sparse_mix_inputs(9, 3, 260, jnp.float32)
+    np.testing.assert_allclose(np.asarray(ops.gossip_gather(idx, w, U)),
+                               np.asarray(ref.gossip_gather_ref(idx, w, U)),
+                               rtol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(ops.gossip_gather(idx, w, U, force="pallas")),
+        np.asarray(ref.gossip_gather_ref(idx, w, U)), rtol=1e-5, atol=1e-5)
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,7 @@ HS = hypothesis.settings(max_examples=10, deadline=None)
                   seed=st.integers(0, 2**31 - 1))
 @HS
 def test_directed_random_row_stochastic(m, n, seed):
-    P = topology.directed_random(jax.random.PRNGKey(seed), m, n)
+    P = topology.directed_random(jax.random.PRNGKey(seed), m, n).dense()
     np.testing.assert_allclose(np.asarray(P).sum(1), 1.0, atol=1e-5)
     nn = min(n, m - 1)
     # every row: self + n neighbors, uniform 1/(n+1)  (paper Formula 6)
@@ -32,7 +32,7 @@ def test_directed_random_row_stochastic(m, n, seed):
 @HS
 def test_undirected_random_doubly_stochastic(seed):
     P = topology.undirected_random(jax.random.PRNGKey(seed), 20, 5)
-    P = np.asarray(P)
+    P = np.asarray(P.dense())
     np.testing.assert_allclose(P.sum(0), 1.0, atol=1e-5)
     np.testing.assert_allclose(P.sum(1), 1.0, atol=1e-5)
     np.testing.assert_allclose(P, P.T, atol=1e-6)
@@ -46,7 +46,8 @@ def test_exponential_graph_B_connected(logm):
     Ps = [topology.directed_exponential(m, t) for t in range(logm)]
     assert topology.union_strongly_connected(Ps)
     for P in Ps:
-        np.testing.assert_allclose(np.asarray(P).sum(1), 1.0, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(P.dense()).sum(1), 1.0,
+                                   atol=1e-6)
 
 
 def test_directed_random_strongly_connected_whp():

@@ -1,0 +1,310 @@
+"""Sparse gossip engine: SparseTopology semantics, flat-buffer engine
+parity (sparse/pallas vs the dense einsum), and the vectorized
+Metropolis-Hastings construction."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dfedpgp, gossip, pushsum, topology
+from repro.core.topology import SparseTopology
+from repro.optim import SGD
+
+
+# ---------------------------------------------------------------------------
+# SparseTopology representation
+# ---------------------------------------------------------------------------
+def test_sparse_is_primary_and_dense_row_stochastic():
+    key = jax.random.PRNGKey(0)
+    for topo in (topology.directed_random(key, 11, 4),
+                 topology.directed_exponential(16, 3),
+                 topology.ring(7),
+                 topology.undirected_random(key, 11, 4)):
+        assert isinstance(topo, SparseTopology)
+        P = np.asarray(topo.dense())
+        np.testing.assert_allclose(P.sum(1), 1.0, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(topo.w).sum(1), 1.0, atol=1e-5)
+        assert topo.idx.dtype == jnp.int32
+        assert int(topo.idx.max()) < topo.m
+
+
+def test_matmul_equals_dense_contraction():
+    key = jax.random.PRNGKey(1)
+    topo = topology.directed_random(key, 13, 5)
+    P = topo.dense()
+    x2 = jax.random.normal(key, (13, 9))
+    x1 = jax.random.normal(key, (13,))
+    x3 = jax.random.normal(key, (13, 2, 4))
+    np.testing.assert_allclose(np.asarray(topo @ x2), np.asarray(P @ x2),
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(topo @ x1), np.asarray(P @ x1),
+                               atol=1e-6)
+    np.testing.assert_allclose(
+        np.asarray(topo @ x3),
+        np.asarray(jnp.einsum("mn,n...->m...", P, x3)), atol=1e-6)
+
+
+def test_from_dense_roundtrip_and_padding():
+    key = jax.random.PRNGKey(2)
+    P = topology.directed_random(key, 9, 3).dense()
+    topo = topology.from_dense(P)
+    assert topo.k == 4
+    np.testing.assert_allclose(np.asarray(topo.dense()), np.asarray(P),
+                               atol=1e-6)
+    # explicit k > nnz pads with (self, 0)
+    topo6 = topology.from_dense(P, k=6)
+    np.testing.assert_allclose(np.asarray(topo6.dense()), np.asarray(P),
+                               atol=1e-6)
+    with pytest.raises(ValueError):
+        topology.from_dense(P, k=2)
+
+
+def test_exponential_duplicate_self_edge_m2():
+    # m=2, offset 1 == self at m=1... at m=2 neighbor is distinct, but the
+    # degenerate m=1 graph folds both half-weights onto the self edge.
+    t = topology.directed_exponential(1, 0)
+    np.testing.assert_allclose(np.asarray(t.dense()), [[1.0]], atol=1e-6)
+    np.testing.assert_allclose(np.asarray(t @ jnp.ones((1, 3))), 1.0,
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# vectorized Metropolis-Hastings undirected graphs
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("m,n", [(6, 2), (20, 5), (33, 4)])
+def test_undirected_random_doubly_stochastic_sparse(m, n):
+    W = np.asarray(topology.undirected_random(
+        jax.random.PRNGKey(m + n), m, n).dense())
+    np.testing.assert_allclose(W, W.T, atol=1e-6)
+    np.testing.assert_allclose(W.sum(0), 1.0, atol=1e-5)
+    np.testing.assert_allclose(W.sum(1), 1.0, atol=1e-5)
+    assert (W.diagonal() > 0).all()
+
+
+def test_undirected_random_matches_loop_reference():
+    """The vectorized MH construction equals the per-edge loop definition
+    on the capped adjacency."""
+    m, n = 16, 3
+    topo = topology.undirected_random(jax.random.PRNGKey(5), m, n)
+    W = np.asarray(topo.dense())
+    A = (W > 0) & ~np.eye(m, dtype=bool)
+    deg = A.sum(1)
+    ref = np.zeros((m, m))
+    for i in range(m):
+        for j in np.nonzero(A[i])[0]:
+            ref[i, j] = 1.0 / (max(deg[i], deg[j]) + 1.0)
+        ref[i, i] = 1.0 - ref[i].sum()
+    np.testing.assert_allclose(W, ref, atol=1e-6)
+
+
+def test_undirected_width_is_deterministic_across_rounds():
+    """k must not depend on the sampled graph, or jitted round functions
+    retrace every round."""
+    ks = [topology.undirected_random(jax.random.PRNGKey(s), 24, 3).k
+          for s in range(8)]
+    assert len(set(ks)) == 1, ks
+
+
+# ---------------------------------------------------------------------------
+# to_column_stochastic zero-column guard
+# ---------------------------------------------------------------------------
+def test_to_column_stochastic_guards_zero_columns():
+    # node 2 has no in-edges under the transposed pattern (zero row in
+    # P_row => zero column in the push matrix before the guard)
+    P = jnp.array([[0.5, 0.5, 0.0],
+                   [0.5, 0.5, 0.0],
+                   [0.0, 0.0, 0.0]])
+    C = np.asarray(topology.to_column_stochastic(P))
+    assert np.isfinite(C).all()
+    np.testing.assert_allclose(C.sum(0), 1.0, atol=1e-6)
+    assert C[2, 2] == 1.0          # isolated node keeps its mass
+
+
+def test_to_column_stochastic_accepts_sparse():
+    topo = topology.directed_random(jax.random.PRNGKey(3), 12, 4)
+    C = np.asarray(topology.to_column_stochastic(topo))
+    np.testing.assert_allclose(C.sum(0), 1.0, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# flat-buffer engine
+# ---------------------------------------------------------------------------
+def _tree(key, m):
+    ks = jax.random.split(key, 3)
+    params = {"body": jax.random.normal(ks[0], (m, 4, 3)),
+              "gn": jax.random.normal(ks[1], (m, 5)),
+              "head": jax.random.normal(ks[2], (m, 2))}
+    mask = {"body": True, "gn": True, "head": False}
+    return params, mask
+
+
+def test_flatten_unflatten_roundtrip():
+    params, mask = _tree(jax.random.PRNGKey(0), 6)
+    flat = gossip.flatten_shared(params, mask)
+    assert flat.shape == (6, 17)
+    assert gossip.flat_width(params, mask) == 17
+    back = gossip.unflatten_shared(flat, params, mask)
+    for k in params:
+        np.testing.assert_allclose(np.asarray(back[k]),
+                                   np.asarray(params[k]), atol=0)
+
+
+@pytest.mark.parametrize("mode", ["sparse", "pallas"])
+def test_gossip_mix_parity_vs_dense(mode):
+    params, mask = _tree(jax.random.PRNGKey(1), 10)
+    topo = topology.directed_random(jax.random.PRNGKey(2), 10, 3)
+    mu = jnp.abs(jax.random.normal(jax.random.PRNGKey(3), (10,))) + 0.5
+    pd, mud = gossip.gossip_mix(params, mu, topo.dense(), mask, mode="dense")
+    pm, mum = gossip.gossip_mix(params, mu, topo, mask, mode=mode)
+    for k in ("body", "gn"):
+        np.testing.assert_allclose(np.asarray(pm[k]), np.asarray(pd[k]),
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(pm["head"]),
+                               np.asarray(params["head"]), atol=0)
+    np.testing.assert_allclose(np.asarray(mum), np.asarray(mud), atol=1e-6)
+
+
+def test_gossip_mix_dense_fallback_for_dense_matrix():
+    """sparse mode handed a dense matrix falls back to the dense path."""
+    params, mask = _tree(jax.random.PRNGKey(1), 8)
+    P = topology.directed_random(jax.random.PRNGKey(2), 8, 3).dense()
+    mu = jnp.ones((8,))
+    pa, _ = gossip.gossip_mix(params, mu, P, mask, mode="sparse")
+    pb, _ = gossip.gossip_mix(params, mu, P, mask, mode="dense")
+    np.testing.assert_allclose(np.asarray(pa["body"]), np.asarray(pb["body"]),
+                               atol=0)
+
+
+def test_gossip_mix_all_personal_mask():
+    """Degenerate all-personal mask: nothing flattens, params pass through
+    untouched and only mu mixes (graceful no-op, like the old per-leaf
+    path)."""
+    params, _ = _tree(jax.random.PRNGKey(0), 6)
+    mask = {k: False for k in params}
+    topo = topology.directed_random(jax.random.PRNGKey(1), 6, 2)
+    mu = jnp.abs(jax.random.normal(jax.random.PRNGKey(2), (6,))) + 0.5
+    for mode in ("dense", "sparse", "pallas"):
+        p2, mu2 = gossip.gossip_mix(params, mu, topo, mask, mode=mode)
+        for k in params:
+            np.testing.assert_allclose(np.asarray(p2[k]),
+                                       np.asarray(params[k]), atol=0)
+        np.testing.assert_allclose(np.asarray(mu2),
+                                   np.asarray(topo @ mu), atol=1e-6)
+
+
+def test_gossip_mix_rejects_unknown_mode():
+    params, mask = _tree(jax.random.PRNGKey(0), 4)
+    with pytest.raises(ValueError):
+        gossip.gossip_mix(params, jnp.ones((4,)),
+                          topology.ring(4), mask, mode="ppermute")
+
+
+def test_pushsum_mix_sparse_equals_dense():
+    key = jax.random.PRNGKey(7)
+    topo = topology.directed_random(key, 9, 2)
+    st = pushsum.init_state({"a": jax.random.normal(key, (9, 6)),
+                             "b": jax.random.normal(key, (9, 2, 2))})
+    s1 = pushsum.mix(topo, st)
+    s2 = pushsum.mix(topo.dense(), st)
+    for k in ("a", "b"):
+        np.testing.assert_allclose(np.asarray(s1.u[k]), np.asarray(s2.u[k]),
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1.mu), np.asarray(s2.mu),
+                               atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# DFedPGP round_fn parity: sparse/pallas vs dense, all three topologies
+# ---------------------------------------------------------------------------
+def _quad(m=8, d=6, dp=3):
+    key = jax.random.PRNGKey(0)
+    cu = jax.random.normal(key, (m, d))
+    cv = jax.random.normal(jax.random.fold_in(key, 1), (m, dp))
+
+    def loss_fn(p, b):
+        return jnp.sum((p["body"] - b["tu"][0]) ** 2) + \
+            jnp.sum((p["head"] - b["tv"][0]) ** 2)
+
+    return loss_fn, {"body": True, "head": False}, cu, cv
+
+
+def _batches(cu, cv, k):
+    rep = lambda x: jnp.repeat(x[:, None], k, 1)[..., None, :]
+    return {"v": {"tu": rep(cu), "tv": rep(cv)},
+            "u": {"tu": rep(cu), "tv": rep(cv)}}
+
+
+def _mk_algo(loss_fn, mask, mode):
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    return dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
+                           k_v=1, k_u=2, lr_decay=0.99, gossip=mode)
+
+
+TOPOS = {
+    "random": lambda t, m: topology.directed_random(
+        jax.random.PRNGKey(40 + t), m, 3),
+    "exponential": lambda t, m: topology.directed_exponential(m, t),
+    "ring": lambda t, m: topology.ring(m),
+}
+
+
+@pytest.mark.parametrize("topo_name", sorted(TOPOS))
+def test_round_fn_sparse_dense_parity(topo_name):
+    loss_fn, mask, cu, cv = _quad()
+    m = cu.shape[0]
+    a_d = _mk_algo(loss_fn, mask, "dense")
+    a_s = _mk_algo(loss_fn, mask, "sparse")
+    s_d = a_d.init({"body": cu, "head": cv})
+    s_s = a_s.init({"body": cu, "head": cv})
+    for t in range(3):
+        topo = TOPOS[topo_name](t, m)
+        b = _batches(cu, cv, 2)
+        s_d, _ = a_d.round_fn(s_d, topo.dense(), b)
+        s_s, _ = a_s.round_fn(s_s, topo, b)
+    np.testing.assert_allclose(np.asarray(s_s.params["body"]),
+                               np.asarray(s_d.params["body"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_s.params["head"]),
+                               np.asarray(s_d.params["head"]), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_s.mu), np.asarray(s_d.mu),
+                               atol=1e-6)
+
+
+def test_round_fn_pallas_parity_random_topology():
+    loss_fn, mask, cu, cv = _quad()
+    m = cu.shape[0]
+    a_d = _mk_algo(loss_fn, mask, "dense")
+    a_p = _mk_algo(loss_fn, mask, "pallas")
+    s_d = a_d.init({"body": cu, "head": cv})
+    s_p = a_p.init({"body": cu, "head": cv})
+    topo = topology.directed_random(jax.random.PRNGKey(9), m, 3)
+    b = _batches(cu, cv, 2)
+    s_d, _ = a_d.round_fn(s_d, topo.dense(), b)
+    s_p, _ = jax.jit(a_p.round_fn)(s_p, topo, b)
+    np.testing.assert_allclose(np.asarray(s_p.params["body"]),
+                               np.asarray(s_d.params["body"]), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s_p.mu), np.asarray(s_d.mu),
+                               atol=1e-6)
+
+
+def test_round_fn_bf16_wire_sparse():
+    """bf16 gossip payload through the flat buffer tracks the f32 run; mu
+    stays exact f32."""
+    loss_fn, mask, cu, cv = _quad()
+    opt = SGD(lr=0.1, momentum=0.0, weight_decay=0.0)
+    mk = lambda gd: dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt,
+                                    opt_v=opt, k_v=1, k_u=1, lr_decay=1.0,
+                                    gossip="sparse", gossip_dtype=gd)
+    a32, a16 = mk(None), mk("bfloat16")
+    s32 = a32.init({"body": cu, "head": cv})
+    s16 = a16.init({"body": cu, "head": cv})
+    for t in range(4):
+        topo = topology.directed_random(jax.random.PRNGKey(60 + t), 8, 3)
+        b = _batches(cu, cv, 1)
+        s32, _ = a32.round_fn(s32, topo, b)
+        s16, _ = a16.round_fn(s16, topo, b)
+    np.testing.assert_allclose(np.asarray(s16.params["body"]),
+                               np.asarray(s32.params["body"]),
+                               rtol=3e-2, atol=3e-2)
+    np.testing.assert_allclose(np.asarray(s16.mu), np.asarray(s32.mu),
+                               rtol=1e-6)
+    assert s16.params["body"].dtype == cu.dtype

@@ -86,7 +86,7 @@ def test_ppermute_schedule_permutation_semantics():
     for rnd in range(3):
         off = 2 ** (rnd % 3)
         P = topology.directed_exponential(m, rnd)
-        src = np.argmax(np.asarray(P) - 0.5 * np.eye(m), axis=1)
+        src = np.argmax(np.asarray(P.dense()) - 0.5 * np.eye(m), axis=1)
         want = np.array([(j - off) % m for j in range(m)])
         np.testing.assert_array_equal(src, want)
 
