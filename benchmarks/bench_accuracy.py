@@ -7,7 +7,6 @@ the target in fewer rounds than the undirected / full-model baselines.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from .common import DIR_03, PAT_2, emit, run, sim
 

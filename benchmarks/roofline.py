@@ -60,8 +60,6 @@ def analyse(rec: dict) -> dict:
     hlo_global = flops * ndev
     useful = model_flops / hlo_global if hlo_global else float("nan")
 
-    bound_gbs = {"compute": PEAK_FLOPS, "memory": HBM_BW,
-                 "collective": ICI_BW}
     step_time = max(terms.values())
     return {
         "arch": arch, "shape": shape, "mesh": rec["mesh"],

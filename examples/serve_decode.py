@@ -18,7 +18,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_reduced
-from repro.models import get_model, encdec
+from repro.models import encdec, get_model
 
 
 def main(argv=None):

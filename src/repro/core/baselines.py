@@ -72,12 +72,10 @@ def _sample(key, m, ratio):
 
 
 # one gossip contraction: neighbor-indexed O(m*k*numel) for a
-# SparseTopology, dense einsum otherwise (single dispatch point in gossip)
+# SparseTopology (including the sparse fully_connected form), dense einsum
+# otherwise — the single dispatch point lives in gossip.mix_any/mix_tree
 _mix_leaf = gossip.mix_any
-
-
-def _mix(P, stacked):
-    return jax.tree.map(lambda a: _mix_leaf(P, a), stacked)
+_mix = gossip.mix_tree
 
 
 # ---------------------------------------------------------------------------

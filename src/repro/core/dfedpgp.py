@@ -21,7 +21,19 @@ import jax
 import jax.numpy as jnp
 
 from repro.optim import SGD, SGDState
-from . import gossip, local, partition, pushsum
+from . import gossip, local, partition
+
+
+def _check_uniform_dtype(layout) -> None:
+    """The resident buffer (params AND momentum) carries one dtype while
+    the tree path accumulates per leaf — mixed shared dtypes would silently
+    break the bit-compatibility contract, so both flat-state constructors
+    (init_flat, state_to_flat) refuse them."""
+    if len(set(layout.dtypes)) > 1:
+        raise ValueError(
+            f"resident flat buffer needs a uniform shared-leaf dtype "
+            f"(got {sorted({str(d) for d in layout.dtypes})}); mixed-"
+            f"dtype shared parts must use the tree-form round_fn")
 
 
 class DFedPGPState(NamedTuple):
@@ -29,6 +41,21 @@ class DFedPGPState(NamedTuple):
     mu: jnp.ndarray        # (m,)
     opt_u: SGDState
     opt_v: SGDState
+    round: jnp.ndarray     # scalar int32
+
+
+class FlatDFedPGPState(NamedTuple):
+    """Resident-buffer round state (docs/gossip.md "resident buffer
+    lifecycle"): the shared part lives in the (m, d_flat) buffer ACROSS
+    rounds — packed once at init, mixed in place every round, unraveled
+    into leaf views only at the loss_fn / eval boundary.  Numerically
+    bit-compatible with DFedPGPState (tests/test_resident_buffer.py);
+    `DFedPGP.state_to_flat` / `state_from_flat` convert."""
+    flat: jnp.ndarray      # (m, d_flat) biased shared buffer u
+    personal: Any          # personal leaves (m, ...); None at shared slots
+    mu: jnp.ndarray        # (m,)
+    opt_u: SGDState        # momentum: ONE (m, d_flat) buffer
+    opt_v: SGDState        # momentum: personal-leaf tree
     round: jnp.ndarray     # scalar int32
 
 
@@ -167,6 +194,170 @@ class DFedPGP:
         metrics = {"loss_v": jnp.mean(loss_v), "loss_u": jnp.mean(loss_u),
                    "mu_min": jnp.min(mu), "mu_max": jnp.max(mu)}
         return new_state, metrics
+
+    # ------------------------------------------------------------------
+    # resident flat-buffer path (tentpole of docs/gossip.md §resident):
+    # the shared part stays in the (m, d_flat) buffer between rounds, so
+    # the per-round flatten/unflatten of round_fn is gone entirely.
+    # ------------------------------------------------------------------
+    def init_flat(self, stacked_params,
+                  layout: Optional[gossip.FlatLayout] = None):
+        """-> (FlatDFedPGPState, FlatLayout).  Packs the shared part ONCE
+        (gossip.FlatClientState); every subsequent round operates on the
+        resident buffer.
+
+        Requires a UNIFORM shared-leaf dtype: the buffer (and hence the
+        optimizer update and momentum) carries one dtype, while the tree
+        path accumulates per leaf — with mixed shared dtypes (e.g. bf16
+        body + f32 norms) the two paths would silently diverge, breaking
+        the bit-compatibility contract.  Mixed-dtype models use round_fn.
+        """
+        fcs, layout = gossip.FlatClientState.create(stacked_params,
+                                                    self.mask, layout)
+        _check_uniform_dtype(layout)
+        m = jax.tree.leaves(stacked_params)[0].shape[0]
+        return FlatDFedPGPState(
+            flat=fcs.flat,
+            personal=fcs.personal,
+            mu=jnp.ones((m,), jnp.float32),
+            opt_u=SGDState(jnp.zeros_like(fcs.flat)),
+            opt_v=SGDState(jax.tree.map(jnp.zeros_like, fcs.personal)),
+            round=jnp.zeros((), jnp.int32),
+        ), layout
+
+    # ------------------------------------------------------------------
+    def local_update_flat(self, flat_row, personal, mu_i, opt_u, opt_v,
+                          batches_v, batches_u, lr_scale, step_gate_u,
+                          layout: gossip.FlatLayout):
+        """One client's alternating update on the resident view.
+        flat_row: (d_flat,) biased shared row; personal: unstacked personal
+        leaves.  The tree form exists only inside loss_fn (unravel at the
+        leaf boundary via local.flat_view_loss)."""
+        # ---- v-steps at fixed z^{t,0} (personal gradient only) ----
+        z_shared = layout.unravel_row(
+            (flat_row / mu_i).astype(flat_row.dtype))
+        z_pinned = jax.tree.map(jax.lax.stop_gradient, z_shared)
+
+        def v_loss(pv, batch):
+            return self.loss_fn(partition.merge(z_pinned, pv), batch)
+
+        personal, opt_v, loss_v = local.sgd_steps(
+            v_loss, self.opt_v, personal, opt_v, batches_v, lr_scale)
+
+        # ---- u-steps: gradient at z^{t,k} = u^{t,k}/mu, applied to the
+        # biased flat row (Algorithm 1 lines 10-11 on the buffer) ----
+        K_u = jax.tree.leaves(batches_u)[0].shape[0]
+        flat_loss = local.flat_view_loss(self.loss_fn, layout, personal)
+
+        def u_step(carry, xs):
+            row, s = carry
+            batch, k = xs
+            # gradient EVALUATED AT z^{t,k} = u^{t,k}/mu and applied to the
+            # biased row — NOT differentiated through the de-bias (that
+            # would scale the gradient by 1/mu; Algorithm 1 lines 10-11,
+            # same as the tree path's value_and_grad(loss_fn)(z_k))
+            z_row = (row / mu_i).astype(row.dtype)
+            loss, g = jax.value_and_grad(flat_loss)(z_row, batch)
+            if self.grad_hook is not None:
+                g = self.grad_hook(g)
+            row2, s2 = self.opt_u.update(g, s, row, lr_scale)
+            if step_gate_u is not None:
+                gate = step_gate_u[k]
+                blend = lambda new, old: (gate * new + (1.0 - gate) * old
+                                          ).astype(new.dtype)
+                row2 = blend(row2, row)
+                s2 = SGDState(blend(s2.momentum, s.momentum))
+            return (row2, s2), loss
+
+        (flat_row, opt_u), losses_u = jax.lax.scan(
+            u_step, (flat_row, opt_u), (batches_u, jnp.arange(K_u)))
+        return flat_row, personal, opt_u, opt_v, (loss_v,
+                                                  jnp.mean(losses_u))
+
+    # ------------------------------------------------------------------
+    def round_fn_flat(self, state: FlatDFedPGPState, P, batches,
+                      layout: gossip.FlatLayout, step_gate_u=None):
+        """Resident-buffer round: local steps on unraveled views, then the
+        push-pull mixes the buffer in place (gossip.mix_flat) — no
+        per-round pack.  mix_fn overrides operate on tree-form leaves
+        (Regime B sharding); use round_fn for those."""
+        if self.mix_fn is not None:
+            raise ValueError("mix_fn overrides need the tree-form "
+                             "round_fn; the resident path mixes the flat "
+                             "buffer directly")
+        if self.grad_hook is not None:
+            # tree-path hooks see per-leaf gradients (e.g. sharding
+            # constraints with a leaf-spec pytree); here the gradient is
+            # one (d_flat,) row — refuse rather than silently hand a hook
+            # the wrong structure.  (local_update_flat does apply the hook
+            # to the flat row for callers driving it directly.)
+            raise ValueError("grad_hook expects tree-form shared-part "
+                             "gradients; use the tree-form round_fn")
+        lr_scale = self.lr_decay ** state.round.astype(jnp.float32)
+        if step_gate_u is None:
+            shp = jax.tree.leaves(batches["u"])[0].shape[:2]   # (m, K_u)
+            step_gate_u = jnp.ones(shp, jnp.float32)
+
+        def client(flat_row, personal, mu_i, opt_u, opt_v, bv, bu, gate):
+            return self.local_update_flat(
+                flat_row, personal, mu_i, opt_u, opt_v, bv, bu,
+                lr_scale, gate, layout)
+
+        flat, personal, opt_u, opt_v, (loss_v, loss_u) = jax.vmap(client)(
+            state.flat, state.personal, state.mu, state.opt_u, state.opt_v,
+            batches["v"], batches["u"], step_gate_u)
+
+        flat, mu = gossip.mix_flat(P, flat, state.mu, mode=self.gossip,
+                                   wire_dtype=self.gossip_dtype)
+        new_state = FlatDFedPGPState(flat, personal, mu, opt_u, opt_v,
+                                     state.round + 1)
+        metrics = {"loss_v": jnp.mean(loss_v), "loss_u": jnp.mean(loss_u),
+                   "mu_min": jnp.min(mu), "mu_max": jnp.max(mu)}
+        return new_state, metrics
+
+    # ------------------------------------------------------------------
+    def eval_params_flat(self, state: FlatDFedPGPState,
+                         layout: gossip.FlatLayout):
+        """Personalized models from the resident buffer: de-bias the
+        buffer, unravel once (the eval boundary), merge personal."""
+        z = state.flat / state.mu[:, None].astype(state.flat.dtype)
+        return gossip.FlatClientState(z, state.personal).to_tree(layout)
+
+    # ------------------------------------------------------------------
+    def state_to_flat(self, state: DFedPGPState,
+                      layout: Optional[gossip.FlatLayout] = None):
+        """Tree-form -> resident state (checkpoint/migration boundary).
+        Enforces the same uniform-dtype precondition as init_flat."""
+        fcs, layout = gossip.FlatClientState.create(state.params, self.mask,
+                                                    layout)
+        _check_uniform_dtype(layout)
+        mom, _ = gossip.FlatClientState.create(state.opt_u.momentum,
+                                               self.mask, layout)
+        mom_v = partition.split(state.opt_v.momentum, self.mask)[1]
+        return FlatDFedPGPState(fcs.flat, fcs.personal, state.mu,
+                                SGDState(mom.flat), SGDState(mom_v),
+                                state.round), layout
+
+    def state_from_flat(self, fstate: FlatDFedPGPState,
+                        layout: gossip.FlatLayout) -> DFedPGPState:
+        """Resident -> tree-form state.  Inactive-part momentum slots are
+        restored as the per-client scalar placeholders init() creates
+        (they are invariantly zero under the masked updates)."""
+        params = gossip.FlatClientState(fstate.flat,
+                                        fstate.personal).to_tree(layout)
+        m = fstate.mu.shape[0]
+
+        def placeholders(keep_shared):
+            return jax.tree.map(
+                lambda p, msk: jnp.zeros((m,), p.dtype)
+                if msk != keep_shared else None, params, self.mask)
+
+        mom_u = partition.merge(layout.unravel(fstate.opt_u.momentum),
+                                placeholders(True))
+        mom_v = partition.merge(fstate.opt_v.momentum,
+                                placeholders(False))
+        return DFedPGPState(params, fstate.mu, SGDState(mom_u),
+                            SGDState(mom_v), fstate.round)
 
     # ------------------------------------------------------------------
     def eval_params(self, state: DFedPGPState):

@@ -7,7 +7,7 @@ module provides the O(m*k*d) path (docs/gossip.md):
 
 1. `mix_rows(idx, w, x)` — the gather-weighted-sum primitive, unrolled over
    the (small, static) neighbor axis: k row-gathers + fused axpys.  On CPU
-   at m=1024, k=8 this is ~11x faster than the dense matmul (measured:
+   at m=1024, k=8 this is ~15x faster than the dense matmul (measured:
    BENCH_gossip.json); on TPU the same contraction is the Pallas kernel
    `kernels/gossip_gather.py`.
 2. `flatten_shared` / `unflatten_shared` — ravel all shared-part leaves of
@@ -27,8 +27,12 @@ module provides the O(m*k*d) path (docs/gossip.md):
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any, NamedTuple
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import partition
 from .topology import SparseTopology
@@ -55,14 +59,33 @@ def mix_rows(idx: jnp.ndarray, w: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
     return out
 
 
+def no_sparsity(P) -> bool:
+    """True when a SparseTopology has no sparsity to exploit (k >= m, e.g.
+    the sparse fully_connected form).  mix_rows unrolls the neighbor axis
+    into k gather+axpy terms at trace time, so at k = m the dense matmul
+    is both the faster contraction and the smaller program — EVERY engine
+    entry point (mix_any, mix_flat, gossip_mix) consults this one rule and
+    densifies instead."""
+    return isinstance(P, SparseTopology) and P.k >= P.m
+
+
 def mix_any(P, x: jnp.ndarray) -> jnp.ndarray:
     """One gossip contraction of stacked per-client values x with either
     topology representation: neighbor-indexed O(m*k*numel) for a
-    SparseTopology, dense einsum otherwise.  The single dispatch point for
-    pushsum.mix, the DFL baselines and SparseTopology.__matmul__."""
-    if isinstance(P, SparseTopology):
+    SparseTopology (densified when no_sparsity), dense einsum otherwise.
+    The single dispatch point for pushsum.mix, the DFL baselines and
+    SparseTopology.__matmul__."""
+    if isinstance(P, SparseTopology) and not no_sparsity(P):
         return mix_rows(P.idx, P.w, x)
-    return jnp.einsum("mn,n...->m...", P.astype(x.dtype), x)
+    Pd = P.dense() if isinstance(P, SparseTopology) else P
+    return jnp.einsum("mn,n...->m...", Pd.astype(x.dtype), x)
+
+
+def mix_tree(P, tree):
+    """mix_any over every leaf of a stacked pytree — the per-leaf gossip
+    used by pushsum.mix and the OSGP/DFedAvgM/Dis-PFL baselines (they keep
+    tree form; DFedPGP's resident path mixes the flat buffer instead)."""
+    return jax.tree.map(lambda a: mix_any(P, a), tree)
 
 
 # ---------------------------------------------------------------------------
@@ -83,7 +106,7 @@ def flatten_shared(params, mask, dtype=None) -> jnp.ndarray:
     leaves = jax.tree.leaves(u)
     m = leaves[0].shape[0]
     dt = jnp.dtype(dtype) if dtype is not None else jnp.result_type(*leaves)
-    return jnp.concatenate([l.reshape(m, -1).astype(dt) for l in leaves],
+    return jnp.concatenate([x.reshape(m, -1).astype(dt) for x in leaves],
                            axis=1)
 
 
@@ -94,11 +117,130 @@ def unflatten_shared(flat: jnp.ndarray, params, mask):
     u, v = partition.split(params, mask)
     leaves, treedef = jax.tree.flatten(u)
     out, off = [], 0
-    for l in leaves:
-        n = l[0].size
-        out.append(flat[:, off:off + n].reshape(l.shape).astype(l.dtype))
+    for leaf in leaves:
+        n = leaf[0].size
+        out.append(flat[:, off:off + n].reshape(leaf.shape)
+                   .astype(leaf.dtype))
         off += n
     return partition.merge(jax.tree.unflatten(treedef, out), v)
+
+
+# ---------------------------------------------------------------------------
+# resident flat buffer: the (m, d_flat) buffer as the PRIMARY representation
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FlatLayout:
+    """Static descriptor of the shared part's wire layout.
+
+    Built once from a stacked params template + mask (`FlatLayout.build`);
+    afterwards the (m, d_flat) buffer can live across rounds as the resident
+    representation of the shared part, and the tree form is reconstructed
+    only at the leaf boundary (the model's loss_fn, eval) via `unravel_row`
+    / `unravel`.  Leaf order = treedef order of the shared subtree — the
+    same wire layout as `flatten_shared`, so `pack` is bit-compatible with
+    the per-round path it replaces.
+
+    Hashable and cheap: shapes/dtypes tuples plus the shared-subtree
+    treedef, no arrays.
+    """
+    treedef: Any                        # treedef of the shared subtree
+    shapes: tuple                       # per shared leaf, UNSTACKED shape
+    dtypes: tuple
+    sizes: tuple
+    d_flat: int
+
+    @classmethod
+    def build(cls, params, mask) -> "FlatLayout":
+        """`params` is a stacked (m, ...) pytree (or ShapeDtypeStructs)."""
+        u, _ = partition.split(params, mask)
+        leaves, treedef = jax.tree.flatten(u)
+        shapes = tuple(tuple(leaf.shape[1:]) for leaf in leaves)
+        dtypes = tuple(jnp.dtype(leaf.dtype) for leaf in leaves)
+        sizes = tuple(int(np.prod(s, dtype=np.int64)) if s else 1
+                      for s in shapes)
+        return cls(treedef, shapes, dtypes, sizes, sum(sizes))
+
+    # -- tree <-> buffer ---------------------------------------------------
+    def pack(self, params, mask, dtype=None) -> jnp.ndarray:
+        """Stacked shared leaves -> (m, d_flat) buffer (== flatten_shared,
+        same wire order)."""
+        return flatten_shared(params, mask, dtype=dtype)
+
+    def unravel_row(self, row: jnp.ndarray):
+        """One client's (d_flat,) view -> shared subtree (unstacked leaves,
+        cast to each leaf's dtype).  Under jit the slices/reshapes are
+        views — this is the only point where the tree form materializes,
+        at the loss_fn leaf boundary."""
+        out, off = [], 0
+        for shape, dt, n in zip(self.shapes, self.dtypes, self.sizes):
+            out.append(row[off:off + n].reshape(shape).astype(dt))
+            off += n
+        return jax.tree.unflatten(self.treedef, out)
+
+    def unravel(self, flat: jnp.ndarray):
+        """(m, d_flat) buffer -> stacked shared subtree."""
+        m = flat.shape[0]
+        out, off = [], 0
+        for shape, dt, n in zip(self.shapes, self.dtypes, self.sizes):
+            out.append(flat[:, off:off + n].reshape((m,) + shape)
+                       .astype(dt))
+            off += n
+        return jax.tree.unflatten(self.treedef, out)
+
+
+class FlatClientState(NamedTuple):
+    """Resident representation of the stacked client parameters: the shared
+    part lives in ONE (m, d_flat) buffer across rounds (packed once, at
+    init); the personal leaves stay in tree form (None at shared
+    positions, as produced by partition.split).  Gossip mixes the buffer
+    in place — the per-round flatten/unflatten pair of the tree path is
+    gone (ROADMAP item (d))."""
+    flat: jnp.ndarray          # (m, d_flat) shared buffer
+    personal: Any              # personal leaves (m, ...); None at shared
+
+    @classmethod
+    def create(cls, params, mask, layout: FlatLayout | None = None):
+        """-> (state, layout).  Packs the shared part once.  A degenerate
+        all-personal mask yields an empty (m, 0) buffer (rounds still run;
+        only mu mixes)."""
+        layout = layout or FlatLayout.build(params, mask)
+        _, v = partition.split(params, mask)
+        if layout.d_flat == 0:
+            m = jax.tree.leaves(params)[0].shape[0]
+            return cls(jnp.zeros((m, 0), jnp.float32), v), layout
+        return cls(flatten_shared(params, mask), v), layout
+
+    def to_tree(self, layout: FlatLayout):
+        """Reconstruct the stacked params pytree (eval / checkpoint
+        boundary)."""
+        return partition.merge(layout.unravel(self.flat), self.personal)
+
+
+def mix_flat(P, flat: jnp.ndarray, mu: jnp.ndarray, *,
+             mode: str = "sparse", wire_dtype=None):
+    """One push-pull transmission directly on the resident buffer:
+    flat' = P flat, mu' = P mu — no per-round pack/unpack.  The pallas mode
+    hands the buffer to the fused gossip_gather kernel as-is.  mu always
+    mixes in f32; a wire_dtype narrows only the payload of the mix (the
+    buffer returns in its resident dtype)."""
+    if mode not in MODES:
+        raise ValueError(f"gossip mode {mode!r}; known: {MODES}")
+    sparse = isinstance(P, SparseTopology)
+    x = flat.astype(wire_dtype) if wire_dtype is not None else flat
+    if no_sparsity(P):
+        mode = "dense"
+    if mode == "dense" or not sparse:
+        Pd = P.dense() if sparse else P
+        mixed = jnp.einsum("mn,nd->md", Pd.astype(x.dtype), x)
+        mu2 = jnp.einsum("mn,n->m", Pd, mu)
+    elif mode == "pallas":
+        from repro.kernels import ops
+        mixed = ops.gossip_gather(P.idx, P.w, x, force="pallas")
+        mu2 = mix_rows(P.idx, P.w, mu)
+    else:
+        mixed = mix_rows(P.idx, P.w, x)
+        mu2 = mix_rows(P.idx, P.w, mu)
+    return mixed.astype(flat.dtype), mu2
 
 
 # ---------------------------------------------------------------------------
@@ -118,7 +260,9 @@ def gossip_mix(params, mu, P, mask, *, mode: str = "sparse",
     sparse = isinstance(P, SparseTopology)
     if sparse and not any(jax.tree.leaves(mask)):
         # degenerate all-personal mask: nothing to flatten — only mu moves
-        return params, mix_rows(P.idx, P.w, mu)
+        return params, mix_any(P, mu)
+    if no_sparsity(P):
+        mode = "dense"
     if mode == "dense" or not sparse:
         Pd = P.dense() if sparse else P
         gdt = jnp.dtype(wire_dtype) if wire_dtype is not None else None

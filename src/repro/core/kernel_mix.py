@@ -30,12 +30,13 @@ def make_kernel_mix(mask, force: str = "auto"):
         leaves, treedef = jax.tree.flatten(u)
         m = leaves[0].shape[0]
         flat = jnp.concatenate(
-            [l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+            [x.reshape(m, -1).astype(jnp.float32) for x in leaves], axis=1)
         mixed = ops.pushsum_mix(P, flat, force=force)
         out, off = [], 0
-        for l in leaves:
-            n = l[0].size
-            out.append(mixed[:, off:off + n].reshape(l.shape).astype(l.dtype))
+        for leaf in leaves:
+            n = leaf[0].size
+            out.append(mixed[:, off:off + n].reshape(leaf.shape)
+                       .astype(leaf.dtype))
             off += n
         u2 = jax.tree.unflatten(treedef, out)
         mu2 = jnp.einsum("mn,n->m", P, mu)

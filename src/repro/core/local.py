@@ -7,7 +7,7 @@ heterogeneity (paper Table 3): gated-off steps apply a zero update.
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -28,6 +28,21 @@ def masked_grads(grads, mask, keep_shared: bool):
     return jax.tree.map(
         lambda g, m: g if (m == keep_shared) else jnp.zeros((), g.dtype),
         grads, mask)
+
+
+def flat_view_loss(loss_fn: Callable, layout, personal_i):
+    """Wrap a tree-form loss into one over a client's flat shared row.
+
+    The resident-buffer path (core/dfedpgp.py round_fn_flat) keeps the
+    shared part in the (m, d_flat) buffer across rounds; local SGD differs
+    through this wrapper, which unravels the row into leaf views ONLY at
+    the loss_fn boundary — under jit the slices/reshapes are views, so the
+    gradient comes back as one flat row with no per-leaf concat."""
+    def wrapped(flat_row, batch):
+        shared = layout.unravel_row(flat_row)
+        return loss_fn(partition.merge(shared, personal_i), batch)
+
+    return wrapped
 
 
 def sgd_steps(loss_fn: Callable, opt: SGD, params, opt_state: SGDState,

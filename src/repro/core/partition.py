@@ -6,7 +6,7 @@ to restrict gossip to the shared part — the "partial gradient push".
 """
 from __future__ import annotations
 
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 

@@ -30,10 +30,10 @@ def mix(P, state: PushSumState) -> PushSumState:
     """One push-pull transmission: u <- P u, mu <- P mu.
 
     P: SparseTopology (O(m*k*numel) neighbor-indexed gather) or a dense
-    (m, m) matrix (legacy O(m^2*numel) contraction)."""
-    return PushSumState(
-        jax.tree.map(lambda a: gossip.mix_any(P, a), state.u),
-        gossip.mix_any(P, state.mu))
+    (m, m) matrix (legacy O(m^2*numel) contraction) — one dispatch point,
+    gossip.mix_tree/mix_any, shared with every DFL baseline."""
+    return PushSumState(gossip.mix_tree(P, state.u),
+                        gossip.mix_any(P, state.mu))
 
 
 def debias(state: PushSumState):

@@ -20,6 +20,7 @@ baselines, diagnostics, and parity tests.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple
 
 import jax
@@ -57,10 +58,12 @@ class SparseTopology(NamedTuple):
         return jnp.zeros((m, m), self.w.dtype).at[rows, self.idx].add(self.w)
 
     def __matmul__(self, x):
-        """P @ x without densifying: out[i] = sum_j w[i,j] * x[idx[i,j]].
-        x: (m,) or (m, ...) stacked per-client values."""
+        """P @ x: out[i] = sum_j w[i,j] * x[idx[i,j]] for x (m,) or
+        (m, ...).  Dispatches through gossip.mix_any, which densifies the
+        no-sparsity k == m case (fully_connected) instead of unrolling m
+        gather terms at trace time."""
         from . import gossip  # local import: gossip imports this module
-        return gossip.mix_rows(self.idx, self.w, jnp.asarray(x))
+        return gossip.mix_any(self, jnp.asarray(x))
 
 
 def from_dense(P, k: int | None = None) -> SparseTopology:
@@ -125,9 +128,17 @@ def ring(m: int) -> SparseTopology:
     return SparseTopology(idx, jnp.full((m, 2), 0.5, jnp.float32))
 
 
-def fully_connected(m: int) -> jnp.ndarray:
-    # k = m: nothing to gain from the sparse form — stays dense.
-    return jnp.full((m, m), 1.0 / m)
+def fully_connected(m: int) -> SparseTopology:
+    """Complete graph, uniform 1/m weights.  k = m (self first, then the
+    m-1 peers in id order): nothing to gain asymptotically, but returning a
+    SparseTopology keeps `mix_any` dispatch uniform — the simulator's
+    gossip knob no longer silently densifies for this graph.  `.dense()`
+    recovers the classic (m, m) averaging matrix."""
+    rows = jnp.arange(m)[:, None]
+    others = jnp.arange(m)[None, :] + rows + 1          # (m, m): i+1 .. i+m
+    idx = jnp.concatenate([rows, jnp.mod(others, m)[:, : m - 1]], axis=1)
+    return SparseTopology(idx.astype(jnp.int32),
+                          jnp.full((m, m), 1.0 / m, jnp.float32))
 
 
 def to_column_stochastic(P_row) -> jnp.ndarray:
@@ -179,6 +190,122 @@ def undirected_random(key, m: int, n_neighbors: int) -> SparseTopology:
     idx = np.where(w > 0, order, np.arange(m)[:, None])
     return SparseTopology(jnp.asarray(idx, jnp.int32),
                           jnp.asarray(w, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# round schedules: one object decides who talks to whom, in both regimes
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class TopologySchedule:
+    """The time-varying mixing schedule  t -> SparseTopology.
+
+    The paper's convergence argument rests on the directed mixing schedule
+    (tighter connectivity -> faster convergence), so it gets one canonical
+    representation consumed by every regime:
+
+    - Regime A (`fl/simulator.py`): `schedule.at(t)` yields the round's
+      SparseTopology for the vmapped gossip engines.
+    - Regime B (`launch/steps.py`): `schedule.permutation_offsets()` yields
+      the per-round ppermute offsets for the shard_map datacenter mix —
+      derived from the same neighbor tables, so the two mixes agree
+      leaf-for-leaf (tests/test_regime_parity.py).
+
+    Determinism: `at(t)` is a pure function of (kind, m, n, seed, t) —
+    two instances built with the same arguments produce identical neighbor
+    tables for every round.  Random kinds fold the round index into a
+    PRNGKey(seed); static kinds ignore t entirely.
+    """
+    kind: str                      # random | exponential | ring | full | undirected
+    m: int
+    n: int = 0                     # in-degree for the random kinds
+    seed: int = 0
+
+    KINDS = ("random", "exponential", "ring", "full", "undirected")
+
+    def __post_init__(self):
+        if self.kind not in self.KINDS:
+            raise ValueError(
+                f"schedule kind {self.kind!r}; known: {self.KINDS}")
+
+    # -- constructors ------------------------------------------------------
+    @classmethod
+    def random(cls, m: int, n: int, seed: int = 0) -> "TopologySchedule":
+        return cls("random", m, n, seed)
+
+    @classmethod
+    def exponential(cls, m: int) -> "TopologySchedule":
+        assert m & (m - 1) == 0, "exponential graph wants power-of-two m"
+        return cls("exponential", m)
+
+    @classmethod
+    def ring(cls, m: int) -> "TopologySchedule":
+        return cls("ring", m)
+
+    @classmethod
+    def full(cls, m: int) -> "TopologySchedule":
+        return cls("full", m)
+
+    @classmethod
+    def undirected(cls, m: int, n: int, seed: int = 0) -> "TopologySchedule":
+        return cls("undirected", m, n, seed)
+
+    # -- the schedule ------------------------------------------------------
+    @property
+    def period(self) -> int:
+        """Rounds until the schedule repeats (B of the B-strongly-connected
+        window for the exponential graph; 1 for static graphs; 0 marks the
+        aperiodic random kinds)."""
+        if self.kind == "exponential":
+            return max(int(np.log2(self.m)), 1)
+        if self.kind in ("ring", "full"):
+            return 1
+        return 0
+
+    def key(self, t) -> jnp.ndarray:
+        return jax.random.fold_in(jax.random.PRNGKey(self.seed), t)
+
+    def at(self, t) -> SparseTopology:
+        """The round-t mixing pattern."""
+        if self.kind == "random":
+            return directed_random(self.key(t), self.m, self.n)
+        if self.kind == "undirected":
+            return undirected_random(self.key(t), self.m, self.n)
+        if self.kind == "exponential":
+            return directed_exponential(self.m, t)
+        if self.kind == "ring":
+            return ring(self.m)
+        return fully_connected(self.m)
+
+    __call__ = at
+
+    def permutation_offsets(self) -> tuple:
+        """For one-peer schedules: the per-round pull offsets, derived from
+        the neighbor tables themselves (NOT re-derived arithmetic).  Round t
+        uses offsets[t % len(offsets)]: every client pulls from the peer at
+        (i - offset) mod m with weights (1/2, 1/2) — the doubly-stochastic
+        permutation mix Regime B implements with lax.ppermute.
+
+        Raises ValueError for schedules that are not permutation mixes.
+        """
+        if self.period == 0:
+            raise ValueError(f"{self.kind!r} schedule is not periodic")
+        offs = []
+        for t in range(self.period):
+            topo = self.at(t)
+            idx, w = np.asarray(topo.idx), np.asarray(topo.w)
+            if idx.shape[1] != 2 or not np.allclose(w, 0.5):
+                raise ValueError(
+                    f"{self.kind!r} round {t} is not a one-peer "
+                    f"(1/2, 1/2) permutation mix")
+            rows = np.arange(self.m)
+            off = int(np.mod(rows[0] - idx[0, 1], self.m))
+            if not np.array_equal(idx[:, 1], np.mod(rows - off, self.m)) \
+                    or not np.array_equal(idx[:, 0], rows):
+                raise ValueError(
+                    f"{self.kind!r} round {t} is not a uniform-offset "
+                    f"permutation")
+            offs.append(off)
+        return tuple(offs)
 
 
 # ---------------------------------------------------------------------------

@@ -1,6 +1,6 @@
-from .synthetic import (ClientData, make_dataset, make_client_data,
-                        dirichlet_probs, pathological_probs, sample_batches,
-                        lm_synthetic_batch)
+from .synthetic import (ClientData, dirichlet_probs, lm_synthetic_batch,
+                        make_client_data, make_dataset, pathological_probs,
+                        sample_batches)
 
 __all__ = ["ClientData", "make_dataset", "make_client_data",
            "dirichlet_probs", "pathological_probs", "sample_batches",

@@ -14,7 +14,7 @@ Test data is partitioned with the SAME per-client distribution as train
 """
 from __future__ import annotations
 
-from typing import NamedTuple, Tuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

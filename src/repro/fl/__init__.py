@@ -1,3 +1,3 @@
-from .simulator import SimConfig, build_algorithm, run_experiment, evaluate
+from .simulator import SimConfig, build_algorithm, evaluate, run_experiment
 
 __all__ = ["SimConfig", "build_algorithm", "run_experiment", "evaluate"]

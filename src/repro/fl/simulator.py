@@ -11,14 +11,14 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from typing import Any, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import baselines, dfedpgp, gossip, partition, topology
-from repro.data import make_dataset, sample_batches, ClientData
+from repro.data import ClientData, make_dataset, sample_batches
 from repro.models import cnn
 from repro.optim import SGD
 
@@ -45,11 +45,17 @@ class SimConfig:
     image_size: int = 8
     noise: float = 0.7              # synthetic-data noise (task difficulty)
     seed: int = 0
-    topology: str = "random"        # random | exponential | ring
+    topology: str = "random"        # random | exponential | ring | full
     # dense | sparse | pallas (docs/gossip.md).  dense/sparse apply to every
     # DFL method; "pallas" selects the fused kernel for DFedPGP's flat-buffer
     # engine — the baselines have no flat buffer and gossip sparse.
     gossip: str = "sparse"
+    # resident flat buffer (DFedPGP only): keep the shared part in the
+    # (m, d_flat) buffer ACROSS rounds (pack once at init, mix in place)
+    # instead of re-flattening every round.  Bit-compatible with the
+    # per-round path (tests/test_resident_buffer.py); False restores the
+    # pre-refactor flatten-per-round behaviour for A/B regression runs.
+    resident: bool = True
 
 
 # algo name -> (constructor kind, context kind)
@@ -93,19 +99,25 @@ def build_algorithm(name: str, loss_fn, mask, sim: SimConfig):
     raise ValueError(f"unknown algorithm {name!r}; known: {ALGOS}")
 
 
-def make_mixing(name: str, key, sim: SimConfig, round_idx: int):
-    """The round's mixing pattern, neighbor-indexed (SparseTopology).
-    With sim.gossip == "dense" it is densified here, so the round functions
-    exercise the legacy O(m^2) einsum path."""
+def make_schedule(name: str, sim: SimConfig) -> topology.TopologySchedule:
+    """The experiment's mixing schedule — ONE TopologySchedule object
+    decides who talks to whom every round (the same object Regime B's
+    ppermute mix derives its permutation offsets from; the old per-round
+    if-ladder `make_mixing` is gone).  Deterministic in (sim.seed, kind)."""
     if name in UNDIRECTED:
-        topo = topology.undirected_random(key, sim.m, sim.n_neighbors)
-    elif sim.topology == "exponential":
-        topo = topology.directed_exponential(sim.m, round_idx)
-    elif sim.topology == "ring":
-        topo = topology.ring(sim.m)
-    else:
-        topo = topology.directed_random(key, sim.m, sim.n_neighbors)
-    return topo.dense() if sim.gossip == "dense" else topo
+        return topology.TopologySchedule.undirected(
+            sim.m, sim.n_neighbors, seed=sim.seed)
+    if sim.topology == "exponential":
+        return topology.TopologySchedule.exponential(sim.m)
+    if sim.topology == "ring":
+        return topology.TopologySchedule.ring(sim.m)
+    if sim.topology == "full":
+        return topology.TopologySchedule.full(sim.m)
+    if sim.topology != "random":
+        raise ValueError(f"topology {sim.topology!r}; known: "
+                         f"random | exponential | ring | full")
+    return topology.TopologySchedule.random(
+        sim.m, sim.n_neighbors, seed=sim.seed)
 
 
 @functools.lru_cache(maxsize=None)
@@ -124,8 +136,12 @@ def evaluate(eval_params, data: ClientData, model_cfg: cnn.CNNConfig):
 def run_experiment(algo_name: str, sim: SimConfig,
                    model_cfg: Optional[cnn.CNNConfig] = None,
                    step_gates: Optional[np.ndarray] = None,
-                   eval_every: int = 10, verbose: bool = False):
-    """Returns history dict with per-eval round accuracies."""
+                   eval_every: int = 10, verbose: bool = False,
+                   return_params: bool = False):
+    """Returns history dict with per-eval round accuracies.  With
+    return_params, history["params"] carries the final stacked
+    personalized models (regression tests compare them across engine
+    knobs)."""
     model_cfg = model_cfg or cnn.CNNConfig(image_size=sim.image_size,
                                            n_classes=sim.n_classes)
     key = jax.random.PRNGKey(sim.seed)
@@ -150,7 +166,17 @@ def run_experiment(algo_name: str, sim: SimConfig,
     if sim.gossip == "pallas" and algo_name != "dfedpgp":
         print(f"[simulator] note: gossip='pallas' applies to dfedpgp's "
               f"flat-buffer engine; {algo_name} gossips via the sparse path")
-    state = algo.init(stacked)
+    schedule = None if (algo_name in CFL or algo_name == "local") else \
+        make_schedule(algo_name, sim)
+    # resident flat buffer: pack the shared part once, here; rounds then
+    # mix the buffer in place (no per-round flatten — docs/gossip.md)
+    use_flat = algo_name == "dfedpgp" and sim.resident
+    if use_flat:
+        state, layout = algo.init_flat(stacked)
+        eval_params = lambda s: algo.eval_params_flat(s, layout)
+    else:
+        state = algo.init(stacked)
+        eval_params = algo.eval_params
 
     k_total = sim.k_local + sim.k_personal
 
@@ -159,6 +185,9 @@ def run_experiment(algo_name: str, sim: SimConfig,
         if algo_name == "dfedpgp":
             b = {"v": jax.tree.map(lambda a: a[:, :sim.k_personal], batches),
                  "u": jax.tree.map(lambda a: a[:, sim.k_personal:], batches)}
+            if use_flat:
+                return algo.round_fn_flat(state, ctx, b, layout,
+                                          step_gate_u=gate)
             return algo.round_fn(state, ctx, b, step_gate_u=gate)
         return algo.round_fn(state, ctx, batches, step_gate=gate)
 
@@ -166,12 +195,18 @@ def run_experiment(algo_name: str, sim: SimConfig,
     t0 = time.time()
     for r in range(sim.rounds):
         k_r = jax.random.fold_in(k_run, r)
-        k_top, k_batch, k_cfl = jax.random.split(k_r, 3)
+        # 3-way split kept so the k_batch/k_cfl streams match the
+        # pre-schedule RNG layout; the topology key is unused now — the
+        # schedule seeds itself from (sim.seed, round)
+        _, k_batch, k_cfl = jax.random.split(k_r, 3)
         batches = sample_batches(k_batch, data, k_total, sim.batch)
-        ctx = k_cfl if algo_name in CFL else make_mixing(
-            algo_name, k_top, sim, r)
-        if algo_name == "local":
+        if algo_name in CFL:
+            ctx = k_cfl
+        elif algo_name == "local":
             ctx = jnp.zeros(())  # unused
+        else:
+            topo = schedule.at(r)
+            ctx = topo.dense() if sim.gossip == "dense" else topo
         if step_gates is not None:
             gate = jnp.asarray(step_gates, jnp.float32)
             gate_u = gate[:, :sim.k_local] if algo_name == "dfedpgp" else \
@@ -181,7 +216,7 @@ def run_experiment(algo_name: str, sim: SimConfig,
         state, metrics = round_jit(state, ctx, batches, gate_u)
 
         if (r + 1) % eval_every == 0 or r == sim.rounds - 1:
-            acc, _ = evaluate(algo.eval_params(state), data, model_cfg)
+            acc, _ = evaluate(eval_params(state), data, model_cfg)
             history["round"].append(r + 1)
             history["acc"].append(acc)
             history["loss"].append(float(metrics["loss"]
@@ -191,4 +226,6 @@ def run_experiment(algo_name: str, sim: SimConfig,
                 print(f"[{algo_name}] round {r+1:4d} acc={acc:.4f} "
                       f"({time.time()-t0:.1f}s)")
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
+    if return_params:
+        history["params"] = eval_params(state)
     return history

@@ -53,13 +53,16 @@ def gossip_gather_pallas(idx: jnp.ndarray, w: jnp.ndarray, U: jnp.ndarray,
 
     idx: (m, k) int32 in-neighbor ids; w: (m, k) weights (cast to f32);
     U: (m, d) payload, any float dtype (returned unchanged).  d is padded
-    to the block_d panel; m needs no padding (one output row per grid step).
+    to the block_d panel ONLY when misaligned: a panel-aligned resident
+    buffer (core/gossip.FlatClientState) is consumed as-is, with no
+    re-pack and no O(m*d) pad copy on the hot path.  m needs no padding
+    (one output row per grid step).
     """
     m, k = idx.shape
     mu, d = U.shape
     assert mu == m, (idx.shape, U.shape)
     dp = max(-(-d // block_d) * block_d, block_d)
-    Up = jnp.zeros((m, dp), U.dtype).at[:, :d].set(U)
+    Up = U if dp == d else jnp.zeros((m, dp), U.dtype).at[:, :d].set(U)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # idx, w ride in SMEM

@@ -11,7 +11,6 @@ from __future__ import annotations
 import functools
 
 import jax
-import jax.numpy as jnp
 
 from . import ref
 from .flash_attention import flash_attention_pallas

@@ -238,7 +238,8 @@ def main(argv=None):
             if status == "ok":
                 f = rec["cost_analysis"].get("flops", float("nan"))
                 extra = (f" compile={rec['compile_s']}s flops={f:.3e}"
-                         f" colls={sum(v['bytes'] for v in rec['collectives'].values()):.3e}B")
+                         f" colls="
+                         f"{sum(v['bytes'] for v in rec['collectives'].values()):.3e}B")
             print(f"[dryrun] {arch:22s} {shp:12s} {args.mesh:6s} {status}{extra}",
                   flush=True)
         except Exception as e:

@@ -29,11 +29,16 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import InputShape
-from repro.core import dfedpgp, partition
+from repro.core import dfedpgp, partition, topology
 from repro.models import get_model, prefill_logits
 from repro.models.config import ModelConfig
 from repro.optim import SGD
 from . import sharding
+
+try:                                     # jax >= 0.5 exports it at top level
+    _shard_map = jax.shard_map
+except AttributeError:                   # jax 0.4.x
+    from jax.experimental.shard_map import shard_map as _shard_map
 
 
 class Layout(NamedTuple):
@@ -228,23 +233,31 @@ def cache_shardings(cache_struct, mesh: Mesh, layout: Layout):
 # gossip variants
 # ---------------------------------------------------------------------------
 def make_ppermute_mix(mesh: Mesh, layout: Layout, mask, params_struct,
-                      wire_dtype=None):
-    """Beyond-paper gossip (§Perf): one-peer exponential directed graph via
-    shard_map + lax.ppermute along the client axis.
+                      wire_dtype=None,
+                      schedule: "topology.TopologySchedule | None" = None):
+    """Beyond-paper gossip (§Perf): one-peer directed graph via shard_map +
+    lax.ppermute along the client axis.
 
-    Per round every client pulls from the single peer at offset
-    2^(t mod log2 m) (SGP's B-strongly-connected schedule, B=log2 m) with
-    weights (1/2, 1/2) — a doubly-stochastic permutation mix, so the
-    push-sum weight stays exactly 1.  Wire bytes: |u| per client per round
-    instead of the mixing-matrix contraction's m-way reduce.
+    The per-round permutation offsets are DERIVED from a
+    `topology.TopologySchedule` (default: the one-peer exponential graph,
+    SGP's B-strongly-connected schedule, B=log2 m) — the same object
+    Regime A's simulator mixes with, so one schedule decides who talks to
+    whom in both regimes and the two mixes agree leaf-for-leaf
+    (tests/test_regime_parity.py).  Round t pulls from the peer at
+    offsets[t mod period] with weights (1/2, 1/2) — a doubly-stochastic
+    permutation mix, so the push-sum weight stays exactly 1.  Wire bytes:
+    |u| per client per round instead of the mixing-matrix contraction's
+    m-way reduce.
 
     Returns mix_fn(params, mu, rnd) -> (params, mu).
     """
     ca = layout.client_axes
     axis = ca if len(ca) > 1 else ca[0]
     m = layout.n_clients
-    log_m = max(int(np.log2(m)), 1)
-    assert m & (m - 1) == 0, "exponential graph wants power-of-two clients"
+    schedule = schedule or topology.TopologySchedule.exponential(m)
+    assert schedule.m == m, (schedule.m, m)
+    offsets = schedule.permutation_offsets()   # validates the (1/2, 1/2) mix
+    period = len(offsets)
 
     ps = params_shardings(params_struct, mesh, layout)
     u_specs = jax.tree.map(lambda s, msk: s.spec if msk else None,
@@ -260,8 +273,8 @@ def make_ppermute_mix(mesh: Mesh, layout: Layout, mask, params_struct,
                     return jax.lax.ppermute(a, axis, perm)
 
                 return jax.lax.switch(
-                    jnp.mod(rnd_s, log_m),
-                    [(lambda o=2 ** j: branch(o)) for j in range(log_m)])
+                    jnp.mod(rnd_s, period),
+                    [(lambda o=off: branch(o)) for off in offsets])
 
             def mix_leaf(a):
                 # quantized push-sum payload: ONLY the permuted copy is
@@ -274,7 +287,7 @@ def make_ppermute_mix(mesh: Mesh, layout: Layout, mask, params_struct,
             mu2 = (mu_shard + permute(mu_shard)) * 0.5
             return u2, mu2
 
-        u2, mu2 = jax.shard_map(
+        u2, mu2 = _shard_map(
             body, mesh=mesh,
             in_specs=(P(), u_specs, P(axis)),
             out_specs=(u_specs, P(axis)))(rnd, u, mu)

@@ -13,19 +13,17 @@ Usage (small smoke config, a few rounds, synthetic LM data):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.configs import SHAPES, get_config, get_reduced
+from repro.configs import get_config, get_reduced
 from repro.core import dfedpgp, partition, topology
-from repro.models import get_model
-from repro.optim import SGD
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
+from repro.models import get_model
+from repro.optim import SGD
 
 
 def synth_lm_batch(key, cfg, lead, seq):
@@ -82,8 +80,6 @@ def main(argv=None):
     mask = partition.build_mask(template, partition.classifier_personal)
 
     opt = SGD(lr=0.02, momentum=0.9, weight_decay=5e-4)
-    shape = dataclasses.replace(SHAPES["train_4k"], seq_len=args.seq,
-                                global_batch=m * args.batch)
     mix_fn = None
     if args.gossip == "ppermute" and mesh is not None:
         layout = steps.Layout(("data",), (), ("model",), (), m, args.batch)

@@ -3,8 +3,8 @@ from __future__ import annotations
 
 from typing import Any, Callable, NamedTuple
 
+from . import dense, encdec, hybrid, moe, ssm, vlm
 from .config import ModelConfig
-from . import dense, moe, ssm, hybrid, encdec, vlm
 
 
 class ModelApi(NamedTuple):

@@ -114,7 +114,8 @@ class ModelConfig:
                     p += D * self.q_lora
                 p += q_in * self.n_heads * (self.nope_head_dim + self.rope_head_dim)
                 p += D * (self.kv_lora + self.rope_head_dim)
-                p += self.kv_lora * self.n_heads * (self.nope_head_dim + self.v_head_dim)
+                p += self.kv_lora * self.n_heads * (self.nope_head_dim +
+                                                    self.v_head_dim)
                 p += self.n_heads * self.v_head_dim * D
                 return p
             qp = D * self.n_heads * hd
@@ -128,8 +129,10 @@ class ModelConfig:
             per_layer = attn_params() + ffn_dense(F)
             return emb + L * per_layer
         if self.family == "moe":
-            e_act = (self.top_k if active_only else self.n_experts) + self.n_shared_experts
-            moe_layer = attn_params() + e_act * 3 * D * self.d_expert + D * self.n_experts
+            e_act = (self.top_k if active_only else self.n_experts) + \
+                self.n_shared_experts
+            moe_layer = attn_params() + e_act * 3 * D * self.d_expert + \
+                D * self.n_experts
             dense_layer = attn_params() + ffn_dense(self.dense_ff or 4 * D)
             n_moe = L - self.first_dense_layers
             return emb + n_moe * moe_layer + self.first_dense_layers * dense_layer

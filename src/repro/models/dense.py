@@ -10,7 +10,6 @@ weights so that a 60-layer model compiles as one loop.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -107,7 +106,6 @@ def _quantize(x):
 def _decode_step_quant(params, cache, tokens, pos, cfg: ModelConfig):
     """int8-KV decode: dequantization fuses into the attention matmul, so
     HBM traffic per step is the int8 cache + scales, not a bf16 cache."""
-    import math as _math
     x = params["embed"].astype(cfg.cdtype)[tokens]
     B = tokens.shape[0]
 

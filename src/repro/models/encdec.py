@@ -109,7 +109,8 @@ def _dec_block(lp, h, enc_out, positions, cfg):
     hn = _ln(h, lp["ln1"])
     h = h + L.attention_train(lp["self_attn"], hn, positions, cfg, theta=0.0)
     hn = _ln(h, lp["ln_x"])
-    h = h + _cross_attend(lp["cross_attn"], hn, _enc_kv(lp["cross_attn"], enc_out, cfg), cfg)
+    h = h + _cross_attend(lp["cross_attn"], hn,
+                          _enc_kv(lp["cross_attn"], enc_out, cfg), cfg)
     hn = _ln(h, lp["ln2"])
     return h + L.gelu_mlp(lp["mlp"], hn)
 

@@ -10,7 +10,6 @@ over stacked period-parameters; the non-multiple tail is a second small scan.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp

@@ -222,13 +222,16 @@ def attention_decode(p, x, pos, cache_k, cache_v, cfg: ModelConfig,
         k = apply_rope(k, posv, th)
     C = cache_k.shape[1]
     slot = jnp.mod(pos, C) if window else jnp.minimum(pos, C - 1)
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k.astype(cache_k.dtype), slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v.astype(cache_v.dtype), slot, axis=1)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), slot, axis=1)
     # key absolute positions for masking
     idx = jnp.arange(C)
     if window:
         n_wraps = pos // C
-        kpos = jnp.where(idx <= jnp.mod(pos, C), idx + n_wraps * C, idx + (n_wraps - 1) * C)
+        kpos = jnp.where(idx <= jnp.mod(pos, C), idx + n_wraps * C,
+                         idx + (n_wraps - 1) * C)
         valid = (kpos >= 0) & (kpos <= pos) & (kpos > pos - window)
     else:
         valid = idx <= jnp.minimum(pos, C - 1)

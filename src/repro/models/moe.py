@@ -18,7 +18,6 @@ the context, so per-token decode cost scales with kv_lora, not heads*head_dim.
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -177,7 +176,8 @@ def mla_train(p, x, positions, cfg: ModelConfig):
     ckv = x @ p["wkv_a"].astype(x.dtype)                            # (B,S,kl+rh)
     c_kv, k_rope = jnp.split(ckv, [cfg.kv_lora], axis=-1)
     c_kv = L.rms_norm(c_kv, p["kv_norm"].astype(x.dtype))
-    k_rope = L.apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # (B,S,1,rh)
+    k_rope = L.apply_rope(k_rope[:, :, None, :], positions,
+                          cfg.rope_theta)          # (B,S,1,rh)
 
     kv = jnp.einsum("bsl,lhd->bshd", c_kv, p["wkv_b"].astype(x.dtype))
     k_nope, v = jnp.split(kv, [nh], axis=-1)
@@ -213,7 +213,8 @@ def mla_decode(p, x, pos, c_cache, r_cache, cfg: ModelConfig):
     r_cache = jax.lax.dynamic_update_slice_in_dim(
         r_cache, k_rope.astype(r_cache.dtype), slot, axis=1)
 
-    w_uk, w_uv = jnp.split(p["wkv_b"].astype(x.dtype), [nh], axis=-1)  # (kl,H,nh),(kl,H,vh)
+    w_uk, w_uv = jnp.split(p["wkv_b"].astype(x.dtype), [nh],
+                           axis=-1)              # (kl,H,nh),(kl,H,vh)
     qc = jnp.einsum("bqhn,khn->bqhk", q_nope, w_uk)                 # (B,1,H,kl)
     scores = (jnp.einsum("bqhk,bck->bhqc", qc, c_cache.astype(x.dtype))
               + jnp.einsum("bqhr,bcr->bhqc", q_rope, r_cache.astype(x.dtype)))
@@ -340,14 +341,17 @@ def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
             },
             "moe": {
                 "c": jnp.zeros((n_moe, batch, cache_len, cfg.kv_lora), cfg.cdtype),
-                "r": jnp.zeros((n_moe, batch, cache_len, cfg.rope_head_dim), cfg.cdtype),
+                "r": jnp.zeros((n_moe, batch, cache_len,
+                                cfg.rope_head_dim), cfg.cdtype),
             },
         }
     shape_d = (nd, batch, cache_len, cfg.n_kv_heads, cfg.hd)
     shape_m = (n_moe, batch, cache_len, cfg.n_kv_heads, cfg.hd)
     return {
-        "dense": {"k": jnp.zeros(shape_d, cfg.cdtype), "v": jnp.zeros(shape_d, cfg.cdtype)},
-        "moe": {"k": jnp.zeros(shape_m, cfg.cdtype), "v": jnp.zeros(shape_m, cfg.cdtype)},
+        "dense": {"k": jnp.zeros(shape_d, cfg.cdtype),
+                  "v": jnp.zeros(shape_d, cfg.cdtype)},
+        "moe": {"k": jnp.zeros(shape_m, cfg.cdtype),
+                "v": jnp.zeros(shape_m, cfg.cdtype)},
     }
 
 

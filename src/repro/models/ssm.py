@@ -39,7 +39,8 @@ def init_mlstm_block(key, cfg: ModelConfig):
         "wv": L.dense_init(ks[4], (up, up), cfg.pdtype),
         "w_if": L.dense_init(ks[5], (up, 2 * cfg.n_heads), cfg.pdtype, scale=0.01),
         "b_if": jnp.concatenate([jnp.zeros((cfg.n_heads,)),
-                                 jnp.linspace(3.0, 6.0, cfg.n_heads)]).astype(cfg.pdtype),
+                                 jnp.linspace(3.0, 6.0, cfg.n_heads)]
+                                ).astype(cfg.pdtype),
         "gn": jnp.ones((up,), cfg.pdtype),
         "w_down": L.dense_init(ks[6], (up, D), cfg.pdtype),
     }
@@ -120,7 +121,8 @@ def mlstm_step(q, k, v, log_i, log_f, state):
     m_new = jnp.maximum(log_f + m, log_i)
     wf = jnp.exp(log_f + m - m_new)
     wi = jnp.exp(log_i - m_new)
-    C = C * wf[..., None, None] + jnp.einsum("bhd,bhe->bhde", kf, vf) * wi[..., None, None]
+    C = C * wf[..., None, None] + \
+        jnp.einsum("bhd,bhe->bhde", kf, vf) * wi[..., None, None]
     n = n * wf[..., None] + kf * wi[..., None]
     num = jnp.einsum("bhd,bhde->bhe", qf, C)
     den = jnp.maximum(jnp.abs(jnp.einsum("bhd,bhd->bh", qf, n)), jnp.exp(-m_new))
@@ -158,7 +160,8 @@ def mlstm_block(p, x, cfg: ModelConfig, state=None):
     q = (xc @ p["wq"].astype(x.dtype)).reshape(B, S, H, hd)
     k = (xc @ p["wk"].astype(x.dtype)).reshape(B, S, H, hd) / math.sqrt(hd)
     v = (xm @ p["wv"].astype(x.dtype)).reshape(B, S, H, hd)
-    gates = (xc @ p["w_if"].astype(x.dtype) + p["b_if"].astype(x.dtype)).astype(jnp.float32)
+    gates = (xc @ p["w_if"].astype(x.dtype) +
+             p["b_if"].astype(x.dtype)).astype(jnp.float32)
     log_i, f_raw = jnp.split(gates, 2, axis=-1)
     log_f = jax.nn.log_sigmoid(f_raw)
 

@@ -14,9 +14,9 @@ import math
 import jax
 import jax.numpy as jnp
 
+from . import dense
 from . import layers as L
 from .config import ModelConfig
-from . import dense
 
 
 init_params = dense.init_params  # same parameter structure (dense + qkv bias)

@@ -12,7 +12,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config, get_reduced
 from repro.core import dfedpgp, partition, topology
-from repro.models import get_model, encdec, prefill_logits
+from repro.models import encdec, get_model, prefill_logits
 from repro.optim import SGD
 
 SEQ = 16

@@ -5,8 +5,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.fl.simulator import ALGOS, SimConfig, build_algorithm, run_experiment
 from repro.core import baselines, partition, topology
+from repro.fl.simulator import ALGOS, SimConfig, run_experiment
 from repro.models import cnn
 from repro.optim import SGD
 

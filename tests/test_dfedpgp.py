@@ -2,9 +2,8 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.core import dfedpgp, kernel_mix, partition, topology
+from repro.core import dfedpgp, kernel_mix, topology
 from repro.optim import SGD
 
 

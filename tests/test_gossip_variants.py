@@ -4,7 +4,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import dfedpgp, partition, topology
+from repro.core import dfedpgp, topology
 from repro.optim import SGD
 
 

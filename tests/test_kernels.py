@@ -4,7 +4,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels import ref, ops
+from repro.kernels import ops, ref
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.gossip_gather import gossip_gather_pallas
 from repro.kernels.pushsum_mix import pushsum_mix_pallas

@@ -6,8 +6,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.models import layers as L
 from repro.configs import get_reduced
+from repro.models import layers as L
 from repro.models import moe as moe_mod
 
 HS = hypothesis.settings(max_examples=8, deadline=None)

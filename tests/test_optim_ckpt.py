@@ -4,10 +4,9 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
+from repro.checkpoint import load_pytree, save_pytree
 from repro.optim import SGD, SGDState, clip_by_global_norm, exp_decay_schedule
-from repro.checkpoint import save_pytree, load_pytree
 
 
 def test_sgd_matches_manual():

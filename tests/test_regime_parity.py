@@ -1,0 +1,100 @@
+"""Regime A / Regime B mixing parity: ONE TopologySchedule drives both the
+simulator's sparse flat-buffer mix and the datacenter shard_map ppermute
+mix, and the two agree leaf-for-leaf.
+
+The real 8-device ppermute run needs forced host devices, which is
+process-global jax state — it runs in a subprocess (same pattern as
+launch/dryrun.py).  A cheap in-process check of the same schedule
+arithmetic (ppermute == roll) keeps signal when subprocesses are
+unavailable.
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip, topology
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def test_schedule_mix_equals_roll_emulation():
+    """mix_flat over schedule.at(t) == the roll-based emulation of the
+    ppermute permutation, 4 rounds, m=8 exponential."""
+    m = 8
+    sched = topology.TopologySchedule.exponential(m)
+    offsets = sched.permutation_offsets()
+    u = jax.random.normal(jax.random.PRNGKey(0), (m, 33))
+    mu = jnp.ones((m,))
+    u_roll = u
+    for t in range(4):
+        u, mu = gossip.mix_flat(sched.at(t), u, mu, mode="sparse")
+        off = offsets[t % len(offsets)]
+        u_roll = 0.5 * (u_roll + jnp.roll(u_roll, shift=off, axis=0))
+    np.testing.assert_allclose(np.asarray(u), np.asarray(u_roll),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(mu), 1.0, atol=1e-6)
+
+
+_SUBPROCESS = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                               " --xla_force_host_platform_device_count=8")
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.core import gossip, partition, topology
+    from repro.launch import steps
+
+    m = 8
+    mesh = jax.make_mesh((m, 1), ("data", "model"))
+    layout = steps.Layout(("data",), (), ("model",), (), m, 1)
+    key = jax.random.PRNGKey(0)
+    params = {"body": jax.random.normal(key, (m, 6, 4)),
+              "head": jax.random.normal(jax.random.fold_in(key, 1), (m, 3))}
+    mask = {"body": True, "head": False}
+    sched = topology.TopologySchedule.exponential(m)
+
+    # Regime B: shard_map ppermute mix driven by the schedule
+    mix_fn = steps.make_ppermute_mix(mesh, layout, mask, params,
+                                     schedule=sched)
+    pB, muB = params, jnp.ones((m,))
+    with mesh:
+        for t in range(4):
+            pB, muB = mix_fn(pB, muB, jnp.asarray(t, jnp.int32))
+
+    # Regime A: resident flat buffer mixed with the SAME schedule
+    lay = gossip.FlatLayout.build(params, mask)
+    flat, muA = lay.pack(params, mask), jnp.ones((m,))
+    for t in range(4):
+        flat, muA = gossip.mix_flat(sched.at(t), flat, muA, mode="sparse")
+    pA = partition.merge(lay.unravel(flat), partition.split(params, mask)[1])
+
+    err = max(float(jnp.abs(pA[k] - pB[k]).max()) for k in pA)
+    err_mu = float(jnp.abs(muA - muB).max())
+    assert err <= 1e-5, f"shared-param mismatch: {err}"
+    assert err_mu <= 1e-6, f"mu mismatch: {err_mu}"
+    # personal part untouched by both
+    assert float(jnp.abs(pB["head"] - params["head"]).max()) == 0.0
+    print("PARITY_OK", err, err_mu)
+""")
+
+
+def test_ppermute_mix_matches_schedule_mix_8_devices():
+    """Acceptance: m=8 exponential clients, 4 rounds — the simulator's
+    schedule-driven sparse mix and the ppermute datacenter mix produce
+    identical shared parameters (f32 tolerance)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src") + os.pathsep + \
+        env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run([sys.executable, "-c", _SUBPROCESS], env=env,
+                          capture_output=True, text=True, timeout=600)
+    assert proc.returncode == 0, f"stdout:\n{proc.stdout}\n" \
+                                 f"stderr:\n{proc.stderr}"
+    assert "PARITY_OK" in proc.stdout

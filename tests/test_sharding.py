@@ -3,14 +3,12 @@
 Pure spec-level tests (no 512-device compile — that's the dry-run's job):
 every leaf of every arch gets a divisibility-valid PartitionSpec.
 """
-import os
 
 import jax
 import numpy as np
 import pytest
-from jax.sharding import PartitionSpec as P
 
-from repro.configs import ARCH_IDS, SHAPES, get_config, get_reduced
+from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.launch import sharding, steps
 
 

@@ -14,7 +14,7 @@ import numpy as np
 import pytest
 
 from repro.configs import SHAPES, get_reduced
-from repro.core import partition, topology
+from repro.core import topology
 from repro.launch import steps
 
 
