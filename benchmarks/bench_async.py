@@ -1,0 +1,90 @@
+"""E7 — async heterogeneity study: virtual-time-to-accuracy (docs/hetero.md).
+
+Sync vs async execution of the DFL push-sum methods (dfedpgp / osgp /
+dfedavgm) under a 5x compute-speed spread (5 capability tiers).  The sync
+regime pays the straggler barrier: every lockstep round costs
+k_total * max(step_cost) ticks of virtual time, because every client
+waits for the slowest peer to finish its local steps.  The async runtime
+(repro.hetero) lets each client run at its own rate with delayed push-sum
+mailboxes, so the same wall of virtual time buys the fast tiers many more
+local rounds.
+
+Reported per algorithm:
+
+  acc_sync / acc_async   — final personalized test accuracy.  Both runs
+                           get the same VIRTUAL-TIME budget, i.e. the
+                           same compute per unit of virtual time; within
+                           it the async fast tiers complete ~SPREAD x
+                           more local rounds — that extra throughput on
+                           the same clock IS the async win;
+  vt_sync / vt_to_match  — virtual time of the full sync run vs the
+                           virtual time at which the async run first
+                           reaches the sync run's final accuracy
+                           (inf -> never matched within the budget);
+  vt_speedup             — vt_sync / vt_to_match: the async win.
+
+  PYTHONPATH=src python -m benchmarks.bench_async [--quick]
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .common import DIR_03, emit, run, sim
+
+ALGOS = ("dfedpgp", "osgp", "dfedavgm")
+SPREAD = 5.0
+
+
+def time_to_accuracy(history, target: float) -> float:
+    """First virtual time at which the accuracy curve reaches target."""
+    for vt, acc in zip(history["vtime"], history["acc"]):
+        if acc >= target:
+            return float(vt)
+    return float("inf")
+
+
+def main(quick: bool = False):
+    rows = []
+    s = sim(**DIR_03, k_local=2, k_personal=1,
+            rounds=10 if quick else 30,
+            hetero="tiered", speed_spread=SPREAD, push_delay_max=1)
+    algos = ALGOS if not quick else ("dfedpgp", "dfedavgm")
+    for algo in algos:
+        h_sync = run(algo, dataclasses.replace(s, runtime="sync"))
+        # EQUAL VIRTUAL TIME, not equal round count: a sync round costs
+        # k_total * SPREAD ticks (the straggler barrier), an async window
+        # k_total ticks — so the async run gets SPREAD x the windows and
+        # exactly the same virtual-time budget as the sync run.
+        h_async = run(algo, dataclasses.replace(
+            s, runtime="async", rounds=int(s.rounds * SPREAD)))
+        # the sync barrier: every round costs the straggler's time
+        vt_sync = [v * SPREAD for v in h_sync["vtime"]]
+        acc_sync = h_sync["final_acc"]
+        vt_match = time_to_accuracy(h_async, acc_sync)
+        # never-matched -> null in the JSON artifact (inf is not a legal
+        # JSON token) and an empty CSV cell
+        matched = math.isfinite(vt_match)
+        rows.append({
+            "algo": algo,
+            "acc_sync": round(acc_sync, 4),
+            "acc_async": round(h_async["final_acc"], 4),
+            "vt_sync": round(vt_sync[-1], 1),
+            "vt_to_match": round(vt_match, 1) if matched else None,
+            "vt_speedup": round(vt_sync[-1] / vt_match, 2)
+            if matched else None,
+            "mean_local_rounds": round(h_async["mean_local_rounds"][-1], 2),
+            "wall_s_sync": h_sync["wall_s"],
+            "wall_s_async": h_async["wall_s"],
+        })
+    emit("E7_async", rows,
+         ["algo", "acc_sync", "acc_async", "vt_sync", "vt_to_match",
+          "vt_speedup", "mean_local_rounds"])
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    main(quick=ap.parse_args().quick)

@@ -7,21 +7,11 @@ heterogeneous local progress.
 """
 from __future__ import annotations
 
-import numpy as np
+from repro.hetero.profiles import tier_gates
 
 from .common import DIR_03, emit, run, sim
 
 ALGOS = ("fedavg", "fedrep", "dfedavgm", "osgp", "dfedpgp")
-
-
-def tier_gates(m: int, k: int) -> np.ndarray:
-    """5 tiers; tier t runs ceil(k*(t+1)/5) of its k local steps."""
-    gates = np.zeros((m, k), np.float32)
-    for i in range(m):
-        tier = i * 5 // m
-        steps = max(1, round(k * (tier + 1) / 5))
-        gates[i, :steps] = 1.0
-    return gates
 
 
 def main(quick: bool = False):

@@ -275,6 +275,58 @@ class DFedPGP:
                                                   jnp.mean(losses_u))
 
     # ------------------------------------------------------------------
+    def tick_update_flat(self, flat_row, personal, mu_i, opt_u, opt_v,
+                         batch, in_v_phase, lr_scale,
+                         layout: gossip.FlatLayout,
+                         has_v_phase: bool = True):
+        """ONE tick of the alternating update on the resident view — the
+        async heterogeneity runtime's step primitive (repro.hetero.runtime
+        vmaps this per client; docs/hetero.md).
+
+        Computes a single v-step (personal part; the u gradient never
+        flows, and u does not move during the v-phase, so de-biasing the
+        CURRENT row reproduces the z^{t,0} pin of local_update_flat) and a
+        single u-step (gradient at z^{t,k} = u^{t,k}/mu applied to the
+        biased row — Algorithm 1 lines 10-11), then selects by the traced
+        per-client `in_v_phase`.  The two branches touch disjoint state
+        (personal/opt_v vs flat/opt_u), so selection is exact: running
+        k_v v-ticks then k_u u-ticks is bit-identical to one
+        local_update_flat call on the same batches.
+
+        has_v_phase is STATIC: the k_v == 0 configurations (full-model
+        push-sum — async OSGP/DFedAvgM) skip the v branch entirely rather
+        than paying a dead gradient per tick.
+        """
+        z_row = (flat_row / mu_i).astype(flat_row.dtype)
+        if has_v_phase:
+            z_pinned = jax.tree.map(jax.lax.stop_gradient,
+                                    layout.unravel_row(z_row))
+
+            def v_loss(pv, b):
+                return self.loss_fn(partition.merge(z_pinned, pv), b)
+
+            loss_v, g_v = jax.value_and_grad(v_loss)(personal, batch)
+            pv2, sv2 = self.opt_v.update(g_v, opt_v, personal, lr_scale)
+
+        flat_loss = local.flat_view_loss(self.loss_fn, layout, personal)
+        loss_u, g_u = jax.value_and_grad(flat_loss)(z_row, batch)
+        if self.grad_hook is not None:
+            g_u = self.grad_hook(g_u)
+        row2, su2 = self.opt_u.update(g_u, opt_u, flat_row, lr_scale)
+
+        if not has_v_phase:
+            return row2, personal, su2, opt_v, loss_u
+
+        sel_v = lambda a, b: jnp.where(in_v_phase, a, b)
+        flat_out = sel_v(flat_row, row2)
+        opt_u_out = SGDState(sel_v(opt_u.momentum, su2.momentum))
+        personal_out = jax.tree.map(sel_v, pv2, personal)
+        opt_v_out = SGDState(jax.tree.map(sel_v, sv2.momentum,
+                                          opt_v.momentum))
+        return (flat_out, personal_out, opt_u_out, opt_v_out,
+                sel_v(loss_v, loss_u))
+
+    # ------------------------------------------------------------------
     def round_fn_flat(self, state: FlatDFedPGPState, P, batches,
                       layout: gossip.FlatLayout, step_gate_u=None):
         """Resident-buffer round: local steps on unraveled views, then the

@@ -217,15 +217,27 @@ class FlatClientState(NamedTuple):
 
 
 def mix_flat(P, flat: jnp.ndarray, mu: jnp.ndarray, *,
-             mode: str = "sparse", wire_dtype=None):
+             mode: str = "sparse", wire_dtype=None, edge_gate=None):
     """One push-pull transmission directly on the resident buffer:
     flat' = P flat, mu' = P mu — no per-round pack/unpack.  The pallas mode
     hands the buffer to the fused gossip_gather kernel as-is.  mu always
     mixes in f32; a wire_dtype narrows only the payload of the mix (the
-    buffer returns in its resident dtype)."""
+    buffer returns in its resident dtype).
+
+    edge_gate: optional (m, k) {0,1} mask multiplied into P's pull weights
+    WITHOUT renormalization — the mailbox form of the mix
+    (repro.hetero.mailbox): gating an edge off means that neighbor's mass
+    simply has not arrived, it is NOT redistributed to the live edges.
+    Needs the neighbor-indexed representation, so it requires a
+    SparseTopology (the dense matrix has no (m, k) edge identity)."""
     if mode not in MODES:
         raise ValueError(f"gossip mode {mode!r}; known: {MODES}")
     sparse = isinstance(P, SparseTopology)
+    if edge_gate is not None:
+        if not sparse:
+            raise ValueError("edge_gate needs a SparseTopology — a dense "
+                             "matrix has no per-edge (m, k) identity")
+        P = SparseTopology(P.idx, P.w * edge_gate.astype(P.w.dtype))
     x = flat.astype(wire_dtype) if wire_dtype is not None else flat
     if no_sparsity(P):
         mode = "dense"

@@ -54,6 +54,38 @@ def rebias(z, mu: jnp.ndarray):
     return jax.tree.map(r, z)
 
 
+def debias_in_flight(flat: jnp.ndarray, mu: jnp.ndarray,
+                     mail_flat: jnp.ndarray, mail_mu: jnp.ndarray):
+    """De-bias a resident (m, d_flat) buffer counting MASS IN FLIGHT.
+
+    Under the async runtime (repro.hetero) a client that just fired holds
+    little or none of its mass locally — the rest sits in mailboxes
+    addressed to it.  Its unbiased model is the de-bias of everything it
+    owns, delivered or not:
+
+        z_i = (u_i + mail_u_i) / (mu_i + mail_mu_i)
+
+    which reduces to the plain z = u/mu when nothing is in flight.  The
+    denominator is exact (no epsilon): a client with zero total mass has
+    no model to evaluate, and the async engines guarantee total mass per
+    client stays positive (every client retains or is owed its self-share).
+    """
+    mu_eff = mu + mail_mu
+    u_eff = flat + mail_flat.astype(flat.dtype)
+    return u_eff / mu_eff[:, None].astype(u_eff.dtype), mu_eff
+
+
+def total_mass(mu: jnp.ndarray, *in_flight_mus) -> jnp.ndarray:
+    """Conserved push-sum weight: local mu plus every in-flight component.
+    Under column-stochastic (push) mixing this is invariant tick to tick —
+    the async runtime's acceptance diagnostic (tests/test_hetero_async.py).
+    """
+    tot = jnp.sum(mu)
+    for extra in in_flight_mus:
+        tot = tot + jnp.sum(extra)
+    return tot
+
+
 def consensus(state: PushSumState):
     """De-biased average across clients — the deployment/serving model."""
     z = debias(state)

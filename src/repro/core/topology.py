@@ -141,6 +141,54 @@ def fully_connected(m: int) -> SparseTopology:
                           jnp.full((m, m), 1.0 / m, jnp.float32))
 
 
+def to_push_sparse(P: SparseTopology,
+                   self_weight: float = 0.5) -> SparseTopology:
+    """Lazy column-stochastic (push) form of a pull pattern, sparse-native.
+
+    Reuses P's edge set but re-weights it so each SENDER j keeps
+    `self_weight` of its mass and splits the rest uniformly over its
+    non-self out-edges (the transposed pull edges):
+
+        w[i, p] = (1 - self_weight) / outdeg(idx[i, p])   for idx[i,p] != i
+        w[i, p] = self_weight (+ the remainder if outdeg == 0)  at the self edge
+
+    Every column sums to 1, so the total push-sum mass is conserved — the
+    invariant the async mailbox regime needs (docs/hetero.md).  The lazy
+    self share matters there too: a sender that keeps half its mass is
+    never yanked onto a stale heavy-mass arrival, which is what makes
+    delayed asynchronous push-sum stable (one-peer SGP keeps exactly 1/2).
+    Jittable: O(m*k), no densify.  Precondition: every row carries a self
+    entry (all the constructors in this module do) — the kept share has
+    no slot otherwise, which would silently destroy mass; checked loudly
+    when the topology is concrete (the host-side schedule path)."""
+    m, _ = P.idx.shape
+    if not isinstance(P.idx, jax.core.Tracer):
+        has_self = (np.asarray(P.idx) == np.arange(m)[:, None]).any(1)
+        if not bool(has_self.all()):
+            raise ValueError(
+                f"to_push_sparse needs a self entry in every row (rows "
+                f"{np.where(~has_self)[0][:5].tolist()} have none): the "
+                f"sender's kept share would have no slot and its mass "
+                f"would be destroyed")
+    rows = jnp.arange(m, dtype=P.idx.dtype)[:, None]
+    self_edge = P.idx == rows
+    real = (P.w > 0) & ~self_edge
+    outdeg = jnp.zeros((m,), jnp.float32).at[P.idx.reshape(-1)].add(
+        real.astype(jnp.float32).reshape(-1))
+    share = (1.0 - self_weight) / jnp.maximum(outdeg, 1.0)
+    w = jnp.where(real, jnp.take(share, P.idx), 0.0)
+    w_self = self_weight + (1.0 - self_weight) * (outdeg <= 0)
+    # place the kept share on the REAL self edge; rows whose self edge
+    # exists only as (self, 0) padding reuse those slots instead (split
+    # evenly — the total stays exactly w_self, so columns still sum to 1)
+    real_self = self_edge & (P.w > 0)
+    self_slot = jnp.where(real_self.any(1, keepdims=True), real_self,
+                          self_edge)
+    cnt = jnp.maximum(self_slot.sum(1, keepdims=True), 1)
+    w = jnp.where(self_slot, w_self[:, None] / cnt, w)
+    return SparseTopology(P.idx, w.astype(jnp.float32))
+
+
 def to_column_stochastic(P_row) -> jnp.ndarray:
     """Turn a pull (row-stochastic) pattern into the equivalent push
     (column-stochastic) matrix over the transposed edge set.

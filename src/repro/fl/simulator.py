@@ -19,6 +19,8 @@ import numpy as np
 
 from repro.core import baselines, dfedpgp, gossip, partition, topology
 from repro.data import ClientData, make_dataset, sample_batches
+from repro.hetero import profiles as hetero_profiles
+from repro.hetero.runtime import AsyncRuntime
 from repro.models import cnn
 from repro.optim import SGD
 
@@ -56,6 +58,20 @@ class SimConfig:
     # per-round path (tests/test_resident_buffer.py); False restores the
     # pre-refactor flatten-per-round behaviour for A/B regression runs.
     resident: bool = True
+    # ---- execution regime (docs/hetero.md) ----
+    # "sync"  — lockstep rounds (the paper's protocol; every client blocks
+    #           on the slowest peer each round);
+    # "async" — virtual-clock gossip with delayed push-sum mailboxes: each
+    #           tick only the clients whose next-event time has arrived
+    #           act.  DFL push-sum methods only (dfedpgp / osgp /
+    #           dfedavgm); history gains a "vtime" axis (virtual-time-to-
+    #           accuracy — the real async win).
+    runtime: str = "sync"
+    hetero: str = "uniform"        # async profile: uniform|tiered|lognormal
+    speed_spread: float = 5.0      # slowest/fastest step-cost ratio
+    push_delay_max: int = 0        # max sender push-delay class, in ticks
+    availability: float = 1.0      # duty fraction of availability traces
+    mailbox_depth: int = 4         # delivery ring depth (>= delays + 1)
 
 
 # algo name -> (constructor kind, context kind)
@@ -63,6 +79,13 @@ ALGOS = ("local", "fedavg", "fedper", "fedrep", "fedbabu", "ditto",
          "dfedavgm", "dfedavgm-p", "osgp", "dispfl", "dfedpgp")
 CFL = ("fedavg", "fedper", "fedrep", "fedbabu", "ditto")
 UNDIRECTED = ("dfedavgm", "dfedavgm-p", "dispfl")
+# push-sum methods the async runtime can drive (docs/hetero.md): osgp and
+# dfedavgm are expressed on the same engine as DFedPGP with an all-shared
+# partition (full-model gossip) and no personal phase — for dfedavgm the
+# undirected doubly-stochastic schedule keeps mu at 1 in steady state, so
+# the push-sum de-bias reduces to plain averaging (and under delays it
+# supplies exactly the correction plain DFedAvgM lacks).
+ASYNC_ALGOS = ("dfedpgp", "osgp", "dfedavgm")
 
 
 def build_algorithm(name: str, loss_fn, mask, sim: SimConfig):
@@ -97,6 +120,30 @@ def build_algorithm(name: str, loss_fn, mask, sim: SimConfig):
             k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay,
             gossip=sim.gossip)
     raise ValueError(f"unknown algorithm {name!r}; known: {ALGOS}")
+
+
+def build_async_core(name: str, loss_fn, mask, sim: SimConfig) -> dfedpgp.DFedPGP:
+    """The async runtime's per-algorithm push-sum core.  dfedpgp keeps its
+    partial partition and alternating phases; osgp/dfedavgm gossip the
+    FULL model (all-shared mask, k_v = 0) — their sync round_fns are the
+    k_v = 0 specialization of Algorithm 1, so one engine drives all three.
+    """
+    if name not in ASYNC_ALGOS:
+        raise ValueError(
+            f"runtime='async' supports the DFL push-sum methods "
+            f"{ASYNC_ALGOS}; {name!r} is round-synchronous only")
+    opt = SGD(lr=sim.lr, momentum=sim.momentum,
+              weight_decay=sim.weight_decay)
+    if name == "dfedpgp":
+        return dfedpgp.DFedPGP(
+            loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
+            k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay,
+            gossip="pallas" if sim.gossip == "pallas" else "sparse")
+    all_shared = jax.tree.map(lambda _: True, mask)
+    return dfedpgp.DFedPGP(
+        loss_fn=loss_fn, mask=all_shared, opt_u=opt, opt_v=opt,
+        k_v=0, k_u=sim.k_local + sim.k_personal, lr_decay=sim.lr_decay,
+        gossip="pallas" if sim.gossip == "pallas" else "sparse")
 
 
 def make_schedule(name: str, sim: SimConfig) -> topology.TopologySchedule:
@@ -162,6 +209,23 @@ def run_experiment(algo_name: str, sim: SimConfig,
 
     if sim.gossip not in gossip.MODES:
         raise ValueError(f"gossip mode {sim.gossip!r}; known: {gossip.MODES}")
+    if sim.runtime not in ("sync", "async"):
+        raise ValueError(f"runtime {sim.runtime!r}; known: sync | async")
+    k_total = sim.k_local + sim.k_personal
+    if step_gates is not None:
+        # loud (m, K) validation instead of sgd_steps' silent broadcast
+        need_k = sim.k_local if algo_name == "dfedpgp" else k_total
+        step_gates = hetero_profiles.validate_step_gates(
+            step_gates, sim.m, need_k)
+    if sim.runtime == "async":
+        if step_gates is not None:
+            raise ValueError(
+                "step_gates are the sync regime's faked heterogeneity; "
+                "the async runtime models speed via SimConfig.hetero")
+        return async_experiment(algo_name, sim, model_cfg, data, loss_fn,
+                                mask, stacked, k_run,
+                                eval_every=eval_every, verbose=verbose,
+                                return_params=return_params)
     algo = build_algorithm(algo_name, loss_fn, mask, sim)
     if sim.gossip == "pallas" and algo_name != "dfedpgp":
         print(f"[simulator] note: gossip='pallas' applies to dfedpgp's "
@@ -178,8 +242,6 @@ def run_experiment(algo_name: str, sim: SimConfig,
         state = algo.init(stacked)
         eval_params = algo.eval_params
 
-    k_total = sim.k_local + sim.k_personal
-
     @jax.jit
     def round_jit(state, ctx, batches, gate):
         if algo_name == "dfedpgp":
@@ -191,7 +253,8 @@ def run_experiment(algo_name: str, sim: SimConfig,
             return algo.round_fn(state, ctx, b, step_gate_u=gate)
         return algo.round_fn(state, ctx, batches, step_gate=gate)
 
-    history = {"round": [], "acc": [], "loss": [], "algo": algo_name}
+    history = {"round": [], "acc": [], "loss": [], "vtime": [],
+               "algo": algo_name, "runtime": "sync"}
     t0 = time.time()
     for r in range(sim.rounds):
         k_r = jax.random.fold_in(k_run, r)
@@ -219,6 +282,10 @@ def run_experiment(algo_name: str, sim: SimConfig,
             acc, _ = evaluate(eval_params(state), data, model_cfg)
             history["round"].append(r + 1)
             history["acc"].append(acc)
+            # lockstep rounds: every round costs k_total ticks of the
+            # SLOWEST participant; homogeneous cost 1 here — heterogeneous
+            # sync cost is charged by the caller (benchmarks/bench_async)
+            history["vtime"].append(float((r + 1) * k_total))
             history["loss"].append(float(metrics["loss"]
                                          if "loss" in metrics
                                          else metrics["loss_u"]))
@@ -228,4 +295,82 @@ def run_experiment(algo_name: str, sim: SimConfig,
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     if return_params:
         history["params"] = eval_params(state)
+    return history
+
+
+# ---------------------------------------------------------------------------
+# async regime: virtual-clock gossip (docs/hetero.md)
+# ---------------------------------------------------------------------------
+def async_round(runtime: AsyncRuntime, tick_fn, state, schedule, data,
+                sim: SimConfig, k_run, tick0: int):
+    """Advance one sync-equivalent WINDOW of k_v + k_u ticks.
+
+    Each tick: sample one minibatch per client (only active clients
+    consume theirs), draw the tick's directed topology from the schedule,
+    and run `runtime.tick` (tick_fn: the experiment's ONE jitted closure
+    over it — the topology rides in as a pytree, so the trace is reused
+    across ticks and windows).  A full-rate client completes exactly one
+    local round per window, so `rounds` windows give the async run the
+    same fast-client step budget as a sync run of `rounds` rounds — but
+    slow clients simply complete fewer rounds instead of stalling the
+    population (the barrier the sync regime pays every round is gone).
+    Returns (state, last_metrics, next_tick)."""
+    metrics = {}
+    for t in range(tick0, tick0 + runtime.k_total):
+        k_t = jax.random.fold_in(k_run, t)
+        b = sample_batches(k_t, data, 1, sim.batch)
+        batch = jax.tree.map(lambda a: a[:, 0], b)
+        # the async regime fires over the LAZY PUSH form of the tick's
+        # graph (to_push_sparse: sender keeps 1/2, splits 1/2 over its
+        # out-edges).  Column-stochastic => total mass is conserved under
+        # any delay trace, and the 1/2 self share keeps a fast client
+        # from being yanked onto a stale heavy-mass arrival — the classic
+        # stability condition of delayed push-sum (one-peer SGP keeps
+        # exactly 1/2).  The pull form stays the sync regime's mix.
+        topo = topology.to_push_sparse(schedule.at(t))
+        state, metrics = tick_fn(state, topo, batch)
+    return state, metrics, tick0 + runtime.k_total
+
+
+def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
+                     loss_fn, mask, stacked, k_run, eval_every: int = 10,
+                     verbose: bool = False, return_params: bool = False):
+    """The `runtime="async"` leg of run_experiment: same data, model and
+    protocol constants, but rounds become windows of ticks on the virtual
+    clock and history carries virtual-time-to-accuracy."""
+    profile = hetero_profiles.make_profile(
+        sim.hetero, sim.m, spread=sim.speed_spread,
+        push_delay_max=sim.push_delay_max, availability=sim.availability,
+        seed=sim.seed)
+    core = build_async_core(algo_name, loss_fn, mask, sim)
+    depth = max(sim.mailbox_depth, sim.push_delay_max + 1)
+    runtime, state = AsyncRuntime.build(core, stacked, profile, depth=depth)
+    schedule = make_schedule(algo_name, sim)
+    tick_fn = jax.jit(lambda s, topo, b: runtime.tick(s, topo, b))
+
+    history = {"round": [], "acc": [], "loss": [], "vtime": [],
+               "mean_local_rounds": [], "algo": algo_name,
+               "runtime": "async"}
+    t0 = time.time()
+    tick = 0
+    for r in range(sim.rounds):
+        state, metrics, tick = async_round(runtime, tick_fn, state,
+                                           schedule, data, sim, k_run,
+                                           tick)
+        if (r + 1) % eval_every == 0 or r == sim.rounds - 1:
+            acc, _ = evaluate(runtime.eval_params(state), data, model_cfg)
+            history["round"].append(r + 1)
+            history["acc"].append(acc)
+            history["vtime"].append(float(metrics["vtime"]))
+            history["loss"].append(float(metrics["loss"]))
+            history["mean_local_rounds"].append(
+                float(jnp.mean(state.local_round.astype(jnp.float32))))
+            if verbose:
+                print(f"[{algo_name}/async] window {r+1:4d} "
+                      f"vtime={float(metrics['vtime']):.0f} acc={acc:.4f} "
+                      f"mass={float(metrics['mass_total']):.3f} "
+                      f"({time.time()-t0:.1f}s)")
+    history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
+    if return_params:
+        history["params"] = runtime.eval_params(state)
     return history

@@ -1,0 +1,28 @@
+"""Asynchronous heterogeneity runtime (docs/hetero.md).
+
+The paper's claim is that directed partial gradient push tolerates
+computation AND communication heterogeneity — but a round-synchronous
+simulator can only fake that with step gates while every client still
+blocks on the slowest peer.  This package runs the actual asynchronous
+regime on the PR-2 resident flat buffer:
+
+- `profiles`  — per-client compute speed / push latency / availability
+                (ClientProfile; tiered and lognormal samplers);
+- `clock`     — jittable time-sliced virtual clock: each global tick only
+                the clients whose next-event time has arrived act;
+- `mailbox`   — delayed push-sum as vectorized in-flight mass buffers
+                (ring of delivery slots + a persistent inbox), conserving
+                the push-sum weight at every tick for any delay trace;
+- `runtime`   — the AsyncRuntime tick engine + the sync-equivalence and
+                virtual-time-to-accuracy contracts.
+"""
+from .clock import ClockState, active_mask, advance, init_clock
+from .mailbox import Mailbox
+from .profiles import ClientProfile, tier_gates, validate_step_gates
+from .runtime import AsyncRuntime, AsyncState
+
+__all__ = [
+    "AsyncRuntime", "AsyncState", "ClientProfile", "ClockState", "Mailbox",
+    "active_mask", "advance", "init_clock", "tier_gates",
+    "validate_step_gates",
+]

@@ -1,0 +1,48 @@
+"""Time-sliced virtual clock for the async runtime (docs/hetero.md).
+
+Virtual time advances in unit ticks.  Each client carries the virtual time
+of its NEXT step event; on a tick it is *active* — completes one local SGD
+step, possibly firing a directed push — iff that time has arrived AND its
+availability trace says it is reachable.  Completing a step costs the
+client `profile.step_cost` ticks of virtual time, so a 5x-slower client
+acts on every 5th tick: computation heterogeneity is real elapsed time,
+not the sync regime's zero-update step gates.
+
+Everything is (m,)-vectorized and jittable; the host never loops over
+clients.  Unavailable clients do NOT accrue lag: their next-event time
+stays put, so they resume at full rate the moment their window opens.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from .profiles import ClientProfile
+
+
+class ClockState(NamedTuple):
+    t: jnp.ndarray          # () int32 — global tick index == virtual time
+    next_time: jnp.ndarray  # (m,) f32 — when each client may act next
+
+
+def init_clock(m: int) -> ClockState:
+    return ClockState(jnp.zeros((), jnp.int32), jnp.zeros((m,), jnp.float32))
+
+
+def active_mask(clock: ClockState, profile: ClientProfile) -> jnp.ndarray:
+    """(m,) bool — clients that act on this tick."""
+    t = clock.t.astype(jnp.float32)
+    return (clock.next_time <= t) & profile.available(t)
+
+
+def advance(clock: ClockState, active: jnp.ndarray,
+            profile: ClientProfile) -> ClockState:
+    """Charge each acting client its step cost and move to the next tick.
+
+    next_time accumulates FRACTIONAL costs exactly (a cost-1.7 client acts
+    at ticks 0, 2, 4, 6, 9, ... — mean rate 1/1.7): the clock is
+    time-sliced, not quantized to integer costs."""
+    nt = jnp.where(active, clock.next_time + profile.step_cost,
+                   clock.next_time)
+    return ClockState(clock.t + 1, nt)

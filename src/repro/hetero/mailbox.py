@@ -1,0 +1,136 @@
+"""Delayed push-sum mailboxes: vectorized in-flight mass (docs/hetero.md).
+
+When a client fires a directed push it transfers ALL of its push-sum mass
+(the biased flat row u_i and the weight mu_i, self-share included) into
+per-edge mailboxes; each edge's message arrives after a per-edge delay.
+Receivers drain arrived mail when they wake for a new local round.  Because
+mass only ever MOVES — client -> slot -> inbox -> client — the total
+push-sum weight  sum_i mu_i + (mu in flight)  is conserved at every tick
+for ANY delay trace, which is exactly the invariant that keeps the de-bias
+z = u/mu correct under asynchrony (Kempe et al. 2003; the paper's
+Appendix B mixing argument).
+
+Representation (all jittable, no per-message Python objects):
+
+- `slots_flat (D, m, d_flat)` / `slots_mu (D, m)` — a ring of D delivery
+  ticks: a push fired at tick t with per-edge delay delta in [0, D-1]
+  accumulates into slot (t + 1 + delta) mod D, addressed to the receiving
+  client's row.  delta = 0 therefore means "arrives next tick" — a push
+  always takes at least one tick of wire time.
+- `inbox_flat (m, d_flat)` / `inbox_mu (m,)` — arrived-but-undrained mail.
+  Every tick, slot (t mod D) is flushed into the inbox (its delivery time
+  has come); the inbox holds the mass until the recipient wakes, so a
+  sleeping client never loses mail to ring-slot reuse.
+
+The per-receiver accumulation of one delay group is a single
+`gossip.mix_flat` call with an (m, k) edge gate — the mailbox-aware form
+of the resident mix: gated-off edges contribute nothing and are NOT
+renormalized (their mass is simply still in flight).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from repro.core import gossip
+from repro.core.topology import SparseTopology
+
+
+class Mailbox(NamedTuple):
+    slots_flat: jnp.ndarray   # (D, m, d_flat) — mass arriving at future ticks
+    slots_mu: jnp.ndarray     # (D, m) f32
+    inbox_flat: jnp.ndarray   # (m, d_flat) — arrived, awaiting drain
+    inbox_mu: jnp.ndarray     # (m,) f32
+
+    @property
+    def depth(self) -> int:
+        return self.slots_flat.shape[0]
+
+
+def create(m: int, d_flat: int, depth: int,
+           dtype=jnp.float32) -> Mailbox:
+    """Empty mailbox.  depth = max supported edge delay + 1 (static: it
+    sizes the ring, so jitted tick functions never retrace on the trace)."""
+    if depth < 1:
+        raise ValueError(f"mailbox depth must be >= 1, got {depth}")
+    return Mailbox(jnp.zeros((depth, m, d_flat), dtype),
+                   jnp.zeros((depth, m), jnp.float32),
+                   jnp.zeros((m, d_flat), dtype),
+                   jnp.zeros((m,), jnp.float32))
+
+
+def flush(mail: Mailbox, tick) -> Mailbox:
+    """Deliver slot (tick mod D) into the inbox and clear it — run at the
+    START of every tick, before any push writes slot (tick + D) mod D."""
+    slot = jnp.mod(tick, mail.depth)
+    return Mailbox(
+        mail.slots_flat.at[slot].set(0.0),
+        mail.slots_mu.at[slot].set(0.0),
+        mail.inbox_flat + mail.slots_flat[slot].astype(mail.inbox_flat.dtype),
+        mail.inbox_mu + mail.slots_mu[slot])
+
+
+def push(mail: Mailbox, P: SparseTopology, flat: jnp.ndarray,
+         mu: jnp.ndarray, fired: jnp.ndarray, edge_delay: jnp.ndarray,
+         tick, *, mode: str = "sparse",
+         n_groups: int | None = None) -> Mailbox:
+    """Accumulate the firing clients' outgoing mass into the ring.
+
+    fired: (m,) bool — which senders push this tick (a sender pushes its
+    ENTIRE mass: the caller zeroes u/mu of fired clients afterwards).
+    edge_delay: (m, k) int32 in [0, n_groups-1], per RECEIVING edge —
+    entry [i, j] delays the message from in-neighbor idx[i, j] to i.
+    The contribution of delay group delta to receiver i is
+    sum_j w[i,j] * 1[delay==delta] * 1[fired[idx[i,j]]] * u[idx[i,j]] —
+    one edge-gated mix_flat per group.
+
+    n_groups (static, default depth): how many delay groups can actually
+    occur.  Each group costs a full O(m*k*d) gated mix, so a caller whose
+    delays are bounded below the ring depth (the runtime knows the
+    profile's max at build time) should pass the bound rather than pay
+    for statically-empty groups.  Delays >= n_groups would be silently
+    dropped — the caller must clamp."""
+    if not isinstance(P, SparseTopology):
+        raise ValueError("mailbox push needs a SparseTopology (per-edge "
+                         "delays have no dense-matrix form)")
+    n_groups = mail.depth if n_groups is None else n_groups
+    if not 1 <= n_groups <= mail.depth:
+        raise ValueError(f"n_groups {n_groups} outside [1, depth="
+                         f"{mail.depth}]")
+    fired_g = jnp.take(fired, P.idx, axis=0)               # (m, k)
+    slots_flat, slots_mu = mail.slots_flat, mail.slots_mu
+    for delta in range(n_groups):
+        gate = (fired_g & (edge_delay == delta)).astype(P.w.dtype)
+        got_f, got_mu = gossip.mix_flat(P, flat, mu, mode=mode,
+                                        edge_gate=gate)
+        slot = jnp.mod(tick + 1 + delta, mail.depth)
+        slots_flat = slots_flat.at[slot].add(
+            got_f.astype(slots_flat.dtype))
+        slots_mu = slots_mu.at[slot].add(got_mu)
+    return Mailbox(slots_flat, slots_mu, mail.inbox_flat, mail.inbox_mu)
+
+
+def drain(mail: Mailbox, who: jnp.ndarray):
+    """Hand the inbox rows of `who` (m,) bool to their recipients.
+    Returns (mail', got_flat (m, d_flat), got_mu (m,)) — got rows are zero
+    for clients that do not drain, so the caller can add unconditionally."""
+    w = who[:, None]
+    got_flat = jnp.where(w, mail.inbox_flat, 0.0)
+    got_mu = jnp.where(who, mail.inbox_mu, 0.0)
+    return Mailbox(mail.slots_flat, mail.slots_mu,
+                   jnp.where(w, 0.0, mail.inbox_flat),
+                   jnp.where(who, 0.0, mail.inbox_mu)), got_flat, got_mu
+
+
+def in_flight(mail: Mailbox):
+    """Per-recipient pending mass (slots + inbox): the amounts that eval
+    and the mass-conservation diagnostic credit to each client."""
+    return (mail.slots_flat.sum(0).astype(mail.inbox_flat.dtype)
+            + mail.inbox_flat,
+            mail.slots_mu.sum(0) + mail.inbox_mu)
+
+
+def mass(mail: Mailbox) -> jnp.ndarray:
+    """Total push-sum weight in flight (scalar f32)."""
+    return mail.slots_mu.sum() + mail.inbox_mu.sum()

@@ -1,0 +1,220 @@
+"""AsyncRuntime: the tick engine tying clock + mailbox + resident buffer.
+
+One `tick` advances the whole population by a single virtual time slice
+(docs/hetero.md lifecycle):
+
+1. **flush**  — the mailbox slot whose delivery time has come moves to the
+   inbox.
+2. **wake**   — active = "next-event time arrived" AND available AND has
+   (or is owed and just received) positive push-sum mass.  Clients at
+   phase 0 of their local round drain their inbox: mass merges ONLY at
+   round boundaries, so the z^{t,0} pin of the v-phase and the biased-row
+   semantics of the u-phase are never broken mid-round.
+3. **step**   — every active client runs ONE alternating step
+   (DFedPGP.tick_update_flat) on the resident (m, d_flat) buffer.
+4. **fire**   — clients completing step k_v + k_u push their ENTIRE mass
+   (self-share included, at self-delay 0) into the mailbox along the
+   tick's directed topology and zero their local u/mu; their local-round
+   counter and lr decay advance.
+5. **clock**  — acting clients are charged their per-step cost.
+
+Contracts (tests/test_hetero_async.py):
+
+- **Sync reduction** — under the uniform profile (cost 1, delay 0, always
+  available) every client fires together every k_v + k_u ticks, and the
+  tick trajectory is BIT-FOR-BIT the resident sync path `round_fn_flat`
+  on the same batches and topologies.
+- **Mass conservation** — sum(mu) + mailbox mass is constant at every
+  tick for ANY delay trace and activity pattern (column-stochastic
+  mixing), which is what keeps z = u/mu unbiased under asynchrony.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gossip, pushsum
+from repro.core.dfedpgp import DFedPGP
+from repro.core.topology import SparseTopology
+from repro.optim import SGDState
+
+from . import clock as vclock
+from . import mailbox as mbox
+from .profiles import ClientProfile, validate_profile
+
+
+class AsyncState(NamedTuple):
+    flat: jnp.ndarray          # (m, d_flat) biased shared buffer u
+    personal: Any              # personal leaves (m, ...); None at shared
+    mu: jnp.ndarray            # (m,) f32 push-sum weights (local share)
+    opt_u: SGDState            # (m, d_flat) momentum buffer
+    opt_v: SGDState            # personal-leaf momentum tree
+    phase: jnp.ndarray         # (m,) int32 in [0, k_v + k_u)
+    local_round: jnp.ndarray   # (m,) int32 completed local rounds
+    clock: vclock.ClockState
+    mail: mbox.Mailbox
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncRuntime:
+    """Per-experiment driver: (algorithm, layout, profile, mailbox depth).
+
+    Build with `AsyncRuntime.build(algo, stacked_params, profile)`; drive
+    with a host loop over `tick` (jit it — every array in AsyncState is a
+    pytree leaf) and read models out with `eval_params`."""
+    algo: DFedPGP
+    layout: gossip.FlatLayout
+    profile: ClientProfile
+    depth: int = 4             # mailbox ring depth = max edge delay + 1
+    # delay groups the PROFILE can produce (static, max push_delay + 1):
+    # each group costs a full O(m*k*d) gated mix per tick, so the push
+    # loops over this bound, not the ring depth
+    profile_groups: int = 1
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, algo: DFedPGP, stacked_params, profile: ClientProfile,
+              depth: int = 4):
+        """-> (runtime, state).  Packs the shared part once (resident
+        buffer) and validates the profile against the client count."""
+        if algo.mix_fn is not None:
+            raise ValueError("mix_fn overrides are a sync tree-form "
+                             "feature; the async runtime mixes through "
+                             "the mailbox")
+        fstate, layout = algo.init_flat(stacked_params)
+        m = fstate.mu.shape[0]
+        validate_profile(profile, m)
+        need = int(jnp.max(profile.push_delay)) + 1
+        if depth < need:
+            raise ValueError(
+                f"mailbox depth {depth} < max profile push_delay + 1 "
+                f"({need}): late mail would alias onto earlier slots")
+        state = AsyncState(
+            flat=fstate.flat, personal=fstate.personal, mu=fstate.mu,
+            opt_u=fstate.opt_u, opt_v=fstate.opt_v,
+            phase=jnp.zeros((m,), jnp.int32),
+            local_round=jnp.zeros((m,), jnp.int32),
+            clock=vclock.init_clock(m),
+            mail=mbox.create(m, layout.d_flat, depth, fstate.flat.dtype))
+        return cls(algo, layout, profile, depth, need), state
+
+    @property
+    def k_total(self) -> int:
+        return self.algo.k_v + self.algo.k_u
+
+    def _mix_mode(self) -> str:
+        # the mailbox's edge-gated groups ride the sparse engine; the
+        # pallas knob keeps meaning "fused kernel" here too
+        return "pallas" if self.algo.gossip == "pallas" else "sparse"
+
+    # ------------------------------------------------------------------
+    def tick(self, state: AsyncState, P: SparseTopology, batches,
+             edge_delay: Optional[jnp.ndarray] = None):
+        """One virtual time slice.  batches: leaves (m, B, ...) — one
+        step's minibatch per client (only active clients consume theirs).
+        P: the tick's directed mixing pattern (SparseTopology — per-edge
+        delays need edge identity).  edge_delay: optional (m, k) int32
+        override of the profile-derived delays, values in [0, depth-1]
+        (entry [i, j] delays the message from in-neighbor idx[i, j] to i;
+        self-edges are forced to 0 — a client's retained share never rides
+        the wire).  Returns (state', metrics)."""
+        if not isinstance(P, SparseTopology):
+            raise ValueError("async ticks need a SparseTopology topology")
+        algo, prof = self.algo, self.profile
+        m = state.mu.shape[0]
+        k_total = self.k_total
+
+        # 1. deliver mail whose time has come
+        mail = mbox.flush(state.mail, state.clock.t)
+
+        # 2. wake: time arrived, available, and owns (or is owed, with the
+        # owed part already delivered) positive push-sum mass
+        time_ok = vclock.active_mask(state.clock, prof)
+        active = time_ok & ((state.mu + mail.inbox_mu) > 0.0)
+        starters = active & (state.phase == 0)
+        mail, got_f, got_mu = mbox.drain(mail, starters)
+        flat = state.flat + got_f.astype(state.flat.dtype)
+        mu = state.mu + got_mu
+
+        # 3. one alternating step per active client
+        lr_scale = algo.lr_decay ** state.local_round.astype(jnp.float32)
+        in_v = state.phase < algo.k_v
+        has_v = algo.k_v > 0
+
+        def client(row, pv, mu_i, ou, ov, b, iv, ls):
+            return algo.tick_update_flat(row, pv, mu_i, ou, ov, b, iv, ls,
+                                         self.layout, has_v)
+
+        flat2, personal2, ou2, ov2, loss = jax.vmap(client)(
+            flat, state.personal, mu, state.opt_u, state.opt_v, batches,
+            in_v, lr_scale)
+
+        sel = lambda n, o: jnp.where(
+            active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
+        flat = sel(flat2, flat)
+        personal = jax.tree.map(sel, personal2, state.personal)
+        opt_u = SGDState(sel(ou2.momentum, state.opt_u.momentum))
+        opt_v = SGDState(jax.tree.map(sel, ov2.momentum,
+                                      state.opt_v.momentum))
+
+        phase = jnp.where(active, state.phase + 1, state.phase)
+        fired = active & (phase >= k_total)
+        phase = jnp.where(fired, 0, phase)
+        local_round = jnp.where(fired, state.local_round + 1,
+                                state.local_round)
+
+        # 4. fire: push the whole mass (self-share at delay 0), zero local.
+        # An explicit edge_delay override may use the whole ring; the
+        # profile-derived delays are bounded by profile_groups (static),
+        # so the push never pays for statically-empty delay groups.
+        groups = self.depth if edge_delay is not None else \
+            self.profile_groups
+        if edge_delay is None:
+            edge_delay = jnp.take(prof.push_delay, P.idx, axis=0)
+        edge_delay = jnp.clip(edge_delay.astype(jnp.int32), 0, groups - 1)
+        self_edge = P.idx == jnp.arange(m, dtype=P.idx.dtype)[:, None]
+        edge_delay = jnp.where(self_edge, 0, edge_delay)
+        # most ticks nobody fires (uniform: 1 in k_total); the all-zero
+        # gated mixes would be exact no-ops, so skip them entirely
+        mail = jax.lax.cond(
+            jnp.any(fired),
+            lambda mm: mbox.push(mm, P, flat, mu, fired, edge_delay,
+                                 state.clock.t, mode=self._mix_mode(),
+                                 n_groups=groups),
+            lambda mm: mm, mail)
+        flat = jnp.where(fired[:, None], 0.0, flat)
+        mu = jnp.where(fired, 0.0, mu)
+
+        # 5. charge virtual time
+        clk = vclock.advance(state.clock, active, prof)
+
+        n_active = jnp.sum(active)
+        metrics = {
+            "loss": jnp.sum(jnp.where(active, loss, 0.0))
+            / jnp.maximum(n_active, 1).astype(loss.dtype),
+            "n_active": n_active,
+            "n_fired": jnp.sum(fired),
+            "mass_total": pushsum.total_mass(mu, mbox.mass(mail)),
+            "vtime": clk.t.astype(jnp.float32),
+        }
+        new_state = AsyncState(flat, personal, mu, opt_u, opt_v, phase,
+                               local_round, clk, mail)
+        return new_state, metrics
+
+    # ------------------------------------------------------------------
+    def eval_params(self, state: AsyncState):
+        """Personalized models mid-flight: de-bias counting the mass still
+        in mailboxes (pushsum.debias_in_flight), unravel once, merge
+        personal — the async analogue of eval_params_flat."""
+        mail_f, mail_mu = mbox.in_flight(state.mail)
+        z, _ = pushsum.debias_in_flight(state.flat, state.mu, mail_f,
+                                        mail_mu)
+        return gossip.FlatClientState(z, state.personal).to_tree(
+            self.layout)
+
+    def mass_total(self, state: AsyncState) -> jnp.ndarray:
+        """Conserved quantity: local + in-flight push-sum weight."""
+        return pushsum.total_mass(state.mu, mbox.mass(state.mail))

@@ -4,17 +4,26 @@ Computes the sparse push-pull transmission over the flat client buffer
 
     out[i, :] = sum_{j < k} w[i, j] * U[idx[i, j], :]        U: (m, d_flat)
 
-in O(m*k*d) HBM traffic: the (m, k) neighbor table rides in as
-scalar-prefetch operands (SMEM), the BlockSpec index_map uses it to DMA the
-j-th in-neighbor's (1, block_d) row panel HBM -> VMEM, and the weighted
-accumulation runs in an f32 VMEM scratch regardless of the wire dtype
-(bf16 payloads supported — the quantized push-sum of Taheri et al.).  The
-grid is (m, d_panels, k) with k innermost so the accumulator lives across
-the neighbor axis and the output row is written once, on the last neighbor.
+in O(m*k*d) HBM traffic.  The (m, k) neighbor table rides in as
+scalar-prefetch operands (SMEM); U stays whole in HBM (`pl.ANY`) and the
+kernel gathers it with MANUAL row DMAs batched into multi-row panels
+(ROADMAP item (b), sublane utilization):
 
-This replaces the dense pushsum_mix matmul (O(m^2*d) MXU work) for the
-paper's regime k = n+1 << m.  `interpret=True` runs the same kernel body
-on CPU — how the kernel is validated in this container; note interpret
+- the grid is (m/block_m, d_panels, k) with k innermost, so the f32 VMEM
+  accumulator lives across the neighbor axis;
+- each grid step issues `block_m` single-row HBM->VMEM copies — one per
+  client in the output panel, rows resolved from the prefetched neighbor
+  table — and keeps ALL of them in flight before waiting (the per-row
+  DMAs of the PR-1 kernel ran strictly one-per-grid-step);
+- the weighted accumulation and the output write then run on full
+  (block_m, block_d) panels: 8 sublanes wide for f32 instead of the old
+  single-row (1, block_d) stores.
+
+bf16 payloads are supported (the quantized push-sum of Taheri et al.) —
+the accumulator is f32 regardless of the wire dtype.  This replaces the
+dense pushsum_mix matmul (O(m^2*d) MXU work) for the paper's regime
+k = n+1 << m.  `interpret=True` runs the same kernel body (including the
+DMAs) on CPU — how the kernel is validated in this container; interpret
 mode executes grid steps sequentially in Python, so it is a correctness
 path, not a CPU fast path (use core.gossip.mix_rows for that).
 """
@@ -25,22 +34,43 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+BM = 8              # output panel rows (f32 sublanes); DMAs in flight
 BD = 512            # row-panel width (lanes: 4 x 128)
 
 
-def _gather_kernel(idx_ref, w_ref, u_ref, out_ref, acc_ref):
-    # idx_ref, w_ref: (m, k) scalar-prefetch (SMEM).  u_ref: the gathered
-    # neighbor's (1, block_d) panel — the index_map already resolved
-    # idx[i, j], so the kernel body only weights and accumulates.
+def _default_block_m(dtype) -> int:
+    """Panel height = the dtype's native sublane tile (8 for f32, 16 for
+    bf16): panels below the tile would re-introduce sub-tile stores."""
+    return 16 if jnp.dtype(dtype).itemsize < 4 else BM
+
+
+def _gather_kernel(idx_ref, w_ref, u_ref, out_ref, rows_ref, acc_ref,
+                   sems):
+    # idx_ref, w_ref: (mp, k) scalar-prefetch (SMEM).  u_ref: the WHOLE
+    # (m, dp) buffer in HBM/ANY — the kernel gathers the panel's block_m
+    # neighbor rows itself, all copies in flight before the first wait.
     i = pl.program_id(0)
+    dt = pl.program_id(1)
     j = pl.program_id(2)
     k = pl.num_programs(2)
+    bm, bd = rows_ref.shape
 
     @pl.when(j == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    acc_ref[...] += w_ref[i, j] * u_ref[...].astype(jnp.float32)
+    def copy(r):
+        return pltpu.make_async_copy(
+            u_ref.at[idx_ref[i * bm + r, j], pl.ds(dt * bd, bd)],
+            rows_ref.at[r], sems.at[r])
+
+    for r in range(bm):
+        copy(r).start()
+    for r in range(bm):
+        copy(r).wait()
+
+    wcol = jnp.stack([w_ref[i * bm + r, j] for r in range(bm)])
+    acc_ref[...] += wcol[:, None] * rows_ref[...].astype(jnp.float32)
 
     @pl.when(j == k - 1)
     def _flush():
@@ -48,38 +78,46 @@ def _gather_kernel(idx_ref, w_ref, u_ref, out_ref, acc_ref):
 
 
 def gossip_gather_pallas(idx: jnp.ndarray, w: jnp.ndarray, U: jnp.ndarray,
-                         block_d: int = BD, interpret: bool = False):
+                         block_d: int = BD, block_m: int | None = None,
+                         interpret: bool = False):
     """out[i] = sum_j w[i,j] * U[idx[i,j]].
 
     idx: (m, k) int32 in-neighbor ids; w: (m, k) weights (cast to f32);
-    U: (m, d) payload, any float dtype (returned unchanged).  d is padded
-    to the block_d panel ONLY when misaligned: a panel-aligned resident
-    buffer (core/gossip.FlatClientState) is consumed as-is, with no
-    re-pack and no O(m*d) pad copy on the hot path.  m needs no padding
-    (one output row per grid step).
+    U: (m, d) payload, any float dtype (returned unchanged).  U itself is
+    never padded or copied: it stays in HBM and rows are gathered by DMA,
+    so a panel-aligned resident buffer (core/gossip.FlatClientState) is
+    consumed as-is (d is zero-padded to the block_d panel only when
+    misaligned).  Only the small (m, k) neighbor table is padded — with
+    (row 0, weight 0) entries — when m is not a multiple of block_m.
     """
     m, k = idx.shape
     mu, d = U.shape
     assert mu == m, (idx.shape, U.shape)
+    block_m = _default_block_m(U.dtype) if block_m is None else block_m
+    mp = -(-m // block_m) * block_m
     dp = max(-(-d // block_d) * block_d, block_d)
+    if mp != m:
+        idx = jnp.concatenate(
+            [idx, jnp.zeros((mp - m, k), idx.dtype)], axis=0)
+        w = jnp.concatenate([w, jnp.zeros((mp - m, k), w.dtype)], axis=0)
     Up = U if dp == d else jnp.zeros((m, dp), U.dtype).at[:, :d].set(U)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,                  # idx, w ride in SMEM
-        grid=(m, dp // block_d, k),             # k innermost: accumulate
+        grid=(mp // block_m, dp // block_d, k),  # k innermost: accumulate
         in_specs=[
-            pl.BlockSpec((1, block_d),          # neighbor row panel
-                         lambda i, dt, j, idx_ref, w_ref:
-                         (idx_ref[i, j], dt)),
+            pl.BlockSpec(memory_space=pl.ANY),  # U whole, gathered by DMA
         ],
-        out_specs=pl.BlockSpec((1, block_d),
+        out_specs=pl.BlockSpec((block_m, block_d),
                                lambda i, dt, j, idx_ref, w_ref: (i, dt)),
-        scratch_shapes=[pltpu.VMEM((1, block_d), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((block_m, block_d), U.dtype),
+                        pltpu.VMEM((block_m, block_d), jnp.float32),
+                        pltpu.SemaphoreType.DMA((block_m,))],
     )
     out = pl.pallas_call(
         _gather_kernel,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((m, dp), U.dtype),
+        out_shape=jax.ShapeDtypeStruct((mp, dp), U.dtype),
         interpret=interpret,
     )(idx.astype(jnp.int32), w.astype(jnp.float32), Up)
-    return out[:, :d]
+    return out[:m, :d]

@@ -110,3 +110,81 @@ def test_computation_heterogeneity_gates():
         gates[i, : 1 + i % k] = 1.0
     h = run_experiment("dfedpgp", SIM, step_gates=gates, eval_every=2)
     assert np.isfinite(h["final_acc"])
+
+
+# ---------------------------------------------------------------------------
+# step_gates through the baselines (local.sgd_steps gating semantics)
+# ---------------------------------------------------------------------------
+def _rand_batches(m, K, B=4):
+    key = jax.random.PRNGKey(9)
+    return {"x": jax.random.normal(key, (m, K, B, 8, 8, 3)),
+            "y": jax.random.randint(jax.random.fold_in(key, 1),
+                                    (m, K, B), 0, 10)}
+
+
+def test_local_only_prefix_gates_equal_truncated_batches():
+    """A gate that keeps the first g_i of K steps must match running
+    client i on just its first g_i batches — gated-off steps are true
+    no-ops for params AND momentum, not merely small updates."""
+    from repro.core import local
+    cfg, stacked, mask, loss_fn = _setup()
+    m, K = 6, 3
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    algo = baselines.LocalOnly(loss_fn=loss_fn, opt=opt, lr_decay=0.99)
+    state = algo.init(stacked)
+    batches = _rand_batches(m, K)
+    keep = np.asarray([1 + i % K for i in range(m)])
+    gates = np.zeros((m, K), np.float32)
+    for i in range(m):
+        gates[i, :keep[i]] = 1.0
+    new, _ = algo.round_fn(state, None, batches,
+                           step_gate=jnp.asarray(gates))
+    for i in range(m):
+        p_i = jax.tree.map(lambda a: a[i], stacked)
+        s_i = jax.tree.map(lambda a: a[i], state.opt.momentum)
+        b_i = jax.tree.map(lambda a: a[i, :keep[i]], batches)
+        want_p, want_s, _ = local.sgd_steps(
+            loss_fn, opt, p_i, baselines.SGDState(s_i), b_i, 1.0)
+        for got, want in zip(jax.tree.leaves(
+                jax.tree.map(lambda a: a[i], new.params)),
+                jax.tree.leaves(want_p)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-6)
+        for got, want in zip(jax.tree.leaves(
+                jax.tree.map(lambda a: a[i], new.opt.momentum)),
+                jax.tree.leaves(want_s.momentum)):
+            np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                       rtol=1e-6, atol=1e-6)
+
+
+def test_osgp_all_zero_gates_reduce_to_pure_mix():
+    """OSGP with every step gated off is one push-sum transmission of the
+    untouched parameters (the gate bypasses the optimizer entirely)."""
+    cfg, stacked, mask, loss_fn = _setup()
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    algo = baselines.OSGP(loss_fn=loss_fn, opt=opt, lr_decay=1.0)
+    state = algo.init(stacked)
+    P = topology.directed_random(jax.random.PRNGKey(2), 6, 2)
+    batches = _rand_batches(6, 2)
+    new, _ = algo.round_fn(state, P, batches,
+                           step_gate=jnp.zeros((6, 2)))
+    for k, leaf in new.params["features"].items():
+        want = np.einsum("mn,n...->m...", np.asarray(P.dense()),
+                         np.asarray(stacked["features"][k]))
+        np.testing.assert_allclose(np.asarray(leaf), want, rtol=1e-4,
+                                   atol=1e-5)
+    np.testing.assert_allclose(np.asarray(new.mu),
+                               np.asarray(P.dense() @ state.mu),
+                               atol=1e-6)
+
+
+@pytest.mark.parametrize("algo", ["fedavg", "fedrep", "dfedavgm", "osgp",
+                                  "dispfl"])
+def test_step_gates_through_every_baseline(algo):
+    """run_experiment threads step_gates into every baseline's round_fn
+    (the paper's Table 3 grid runs all of them)."""
+    from repro.hetero.profiles import tier_gates
+    k = SIM.k_local + SIM.k_personal
+    h = run_experiment(algo, SIM, step_gates=tier_gates(SIM.m, k),
+                       eval_every=2)
+    assert np.isfinite(h["final_acc"]), algo

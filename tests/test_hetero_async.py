@@ -1,0 +1,335 @@
+"""Async heterogeneity runtime (docs/hetero.md): profiles, clock, mailbox,
+and the two acceptance contracts — zero-delay/uniform-speed bit-for-bit
+reduction to the resident sync path, and push-sum mass conservation at
+every tick under arbitrary randomized delay traces."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dfedpgp, topology
+from repro.fl.simulator import SimConfig, run_experiment
+from repro.hetero import clock as vclock
+from repro.hetero import mailbox as mbox
+from repro.hetero import profiles
+from repro.hetero.runtime import AsyncRuntime
+from repro.optim import SGD
+
+
+# ---------------------------------------------------------------------------
+# profiles
+# ---------------------------------------------------------------------------
+def test_profile_samplers_shapes_and_ranges():
+    for kind in ("tiered", "lognormal"):
+        p = profiles.make_profile(kind, 12, spread=5.0, push_delay_max=2,
+                                  availability=0.75, seed=3)
+        assert p.m == 12
+        assert float(p.step_cost.min()) >= 1.0
+        assert int(p.push_delay.min()) >= 0
+    assert profiles.make_profile("uniform", 12).m == 12
+    # uniform + heterogeneity knobs would silently run homogeneous — loud
+    with pytest.raises(ValueError, match="uniform"):
+        profiles.make_profile("uniform", 12, push_delay_max=2)
+    t = profiles.tiered(10, spread=5.0)
+    # tier 0 is the fastest, last tier 5x slower
+    assert float(t.step_cost[0]) == 1.0
+    assert float(t.step_cost[-1]) == 5.0
+
+
+def test_profile_validation_rejects_bad_shapes():
+    p = profiles.uniform(8)
+    with pytest.raises(ValueError, match="shape"):
+        profiles.validate_profile(p, 9)
+    bad = p._replace(step_cost=jnp.full((8,), 0.5))
+    with pytest.raises(ValueError, match="step_cost"):
+        profiles.validate_profile(bad, 8)
+    with pytest.raises(ValueError, match="known"):
+        profiles.make_profile("quantum", 8)
+    # duty 0 would be a population where nobody ever acts — loud, not a
+    # silently-untrained experiment
+    with pytest.raises(ValueError, match="avail_duty"):
+        profiles.make_profile("tiered", 8, availability=0.0)
+
+
+def test_profile_availability_windows():
+    p = profiles.uniform(4)._replace(
+        avail_period=jnp.asarray([0.0, 10.0, 10.0, 10.0]),
+        avail_duty=jnp.asarray([1.0, 0.5, 0.5, 0.5]),
+        avail_phase=jnp.asarray([0.0, 0.0, 5.0, 0.0]))
+    on = np.asarray(jax.vmap(p.available)(jnp.arange(10.0)))
+    assert on[:, 0].all()                       # period 0: always on
+    assert on[:5, 1].all() and not on[5:, 1].any()
+    assert not on[:5, 2].any() and on[5:, 2].all()
+
+
+def test_tier_gates_and_validation():
+    g = profiles.tier_gates(10, 6)
+    assert g.shape == (10, 6)
+    assert g[0].sum() < g[-1].sum()             # slow tier gates steps off
+    assert (g.max(axis=1) == 1.0).all()         # everyone runs >= 1 step
+    with pytest.raises(ValueError, match="step_gates"):
+        profiles.validate_step_gates(g, 12, 6)
+    with pytest.raises(ValueError, match="step_gates"):
+        profiles.validate_step_gates(g[:, :2], 10, 6)
+
+
+# ---------------------------------------------------------------------------
+# clock
+# ---------------------------------------------------------------------------
+def test_clock_fractional_step_costs():
+    p = profiles.uniform(2)._replace(
+        step_cost=jnp.asarray([1.0, 1.7], jnp.float32))
+    cs = vclock.init_clock(2)
+    acts = []
+    for _ in range(17):
+        a = vclock.active_mask(cs, p)
+        cs = vclock.advance(cs, a, p)
+        acts.append(np.asarray(a))
+    acts = np.stack(acts)
+    assert acts[:, 0].all()                     # cost 1: every tick
+    # cost 1.7: 17 ticks of budget buy exactly 10 steps
+    assert acts[:, 1].sum() == 10
+
+
+# ---------------------------------------------------------------------------
+# mailbox
+# ---------------------------------------------------------------------------
+def _ring_topo(m):
+    return topology.ring(m)                     # k = 2: self + left peer
+
+
+def test_mailbox_delivery_timing_and_sleeping_receiver():
+    m, d = 4, 3
+    P = _ring_topo(m)
+    mail = mbox.create(m, d, depth=3)
+    flat = jnp.ones((m, d))
+    mu = jnp.ones((m,))
+    fired = jnp.ones((m,), bool)
+    delay = jnp.asarray([[0, 2]] * m, jnp.int32)  # self now, peer late
+    mail = mbox.push(mail, P, flat, mu, fired, delay, tick=0)
+    # nothing readable before its delivery tick
+    assert float(mail.inbox_mu.sum()) == 0.0
+    mail = mbox.flush(mail, 1)                  # delta=0 arrives at tick 1
+    np.testing.assert_allclose(np.asarray(mail.inbox_mu), 0.5)
+    mail = mbox.flush(mail, 2)                  # nothing lands at tick 2
+    np.testing.assert_allclose(np.asarray(mail.inbox_mu), 0.5)
+    mail = mbox.flush(mail, 3)                  # delta=2 lands at tick 3
+    np.testing.assert_allclose(np.asarray(mail.inbox_mu), 1.0)
+    # a receiver that sleeps does not lose mail to ring reuse
+    for t in range(4, 9):
+        mail = mbox.flush(mail, t)
+    np.testing.assert_allclose(np.asarray(mail.inbox_mu), 1.0)
+    mail, got_f, got_mu = mbox.drain(mail, jnp.asarray([True, False] * 2))
+    np.testing.assert_allclose(np.asarray(got_mu), [1.0, 0.0, 1.0, 0.0])
+    np.testing.assert_allclose(np.asarray(mail.inbox_mu),
+                               [0.0, 1.0, 0.0, 1.0])
+    # mass never created or destroyed anywhere along the way
+    np.testing.assert_allclose(
+        float(mbox.mass(mail) + got_mu.sum()), m, rtol=1e-6)
+
+
+def test_mailbox_depth_guards():
+    with pytest.raises(ValueError, match="depth"):
+        mbox.create(4, 3, depth=0)
+    with pytest.raises(ValueError, match="SparseTopology"):
+        mbox.push(mbox.create(4, 3, depth=2), jnp.eye(4), jnp.ones((4, 3)),
+                  jnp.ones((4,)), jnp.ones((4,), bool),
+                  jnp.zeros((4, 4), jnp.int32), 0)
+
+
+# ---------------------------------------------------------------------------
+# the engine: acceptance contracts
+# ---------------------------------------------------------------------------
+def _quad(m=8, d=6, dp=3):
+    key = jax.random.PRNGKey(0)
+    cu = jax.random.normal(key, (m, d))
+    cv = jax.random.normal(jax.random.fold_in(key, 1), (m, dp))
+
+    def loss_fn(p, b):
+        return jnp.sum((p["body"] - b["tu"][0]) ** 2) + \
+            jnp.sum((p["head"] - b["tv"][0]) ** 2)
+
+    return loss_fn, {"body": True, "head": False}, cu, cv
+
+
+def _batches(cu, cv, kv, ku):
+    rep = lambda x, k: jnp.repeat(x[:, None], k, 1)[..., None, :]
+    return {"v": {"tu": rep(cu, kv), "tv": rep(cv, kv)},
+            "u": {"tu": rep(cu, ku), "tv": rep(cv, ku)}}
+
+
+def _tick_batch(b, t, k_v):
+    src = b["v"] if t < k_v else b["u"]
+    off = t if t < k_v else t - k_v
+    return {k: v[:, off] for k, v in src.items()}
+
+
+def test_async_uniform_zero_delay_reduces_to_sync_bitwise():
+    """ACCEPTANCE: under the uniform profile every client fires together
+    every k_v + k_u ticks and the whole trajectory — buffer, mu, personal
+    leaves and BOTH momenta — is bit-identical to round_fn_flat."""
+    loss_fn, mask, cu, cv = _quad()
+    m = cu.shape[0]
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
+                           k_v=1, k_u=2, lr_decay=0.99)
+    params = {"body": cu, "head": cv}
+    s_sync, layout = algo.init_flat(params)
+    rt, s_async = AsyncRuntime.build(algo, params, profiles.uniform(m),
+                                     depth=2)
+    sched = topology.TopologySchedule.random(m, 3, seed=13)
+    tick = jax.jit(lambda s, p, b: rt.tick(s, p, b))
+    sync_round = jax.jit(
+        lambda s, p, b: algo.round_fn_flat(s, p, b, layout))
+    k_total = rt.k_total
+    for r in range(3):
+        topo = sched.at(r)
+        b = _batches(cu, cv, algo.k_v, algo.k_u)
+        s_sync, _ = sync_round(s_sync, topo, b)
+        for t in range(k_total):
+            s_async, mt = tick(s_async, topo, _tick_batch(b, t, algo.k_v))
+            assert int(mt["n_fired"]) == (m if t == k_total - 1 else 0)
+    # the final pushes are still in flight; deliver and drain them
+    mail = mbox.flush(s_async.mail, s_async.clock.t)
+    mail, got_f, got_mu = mbox.drain(mail, jnp.ones((m,), bool))
+    np.testing.assert_array_equal(np.asarray(s_async.flat + got_f),
+                                  np.asarray(s_sync.flat))
+    np.testing.assert_array_equal(np.asarray(s_async.mu + got_mu),
+                                  np.asarray(s_sync.mu))
+    np.testing.assert_array_equal(np.asarray(s_async.personal["head"]),
+                                  np.asarray(s_sync.personal["head"]))
+    np.testing.assert_array_equal(np.asarray(s_async.opt_u.momentum),
+                                  np.asarray(s_sync.opt_u.momentum))
+    np.testing.assert_array_equal(
+        np.asarray(s_async.opt_v.momentum["head"]),
+        np.asarray(s_sync.opt_v.momentum["head"]))
+    assert (np.asarray(s_async.local_round) == 3).all()
+    # and eval mid-flight (counting mailbox mass) equals sync eval exactly
+    ev_async = rt.eval_params(s_async._replace(mail=s_async.mail))
+    ev_sync = algo.eval_params_flat(s_sync, layout)
+    np.testing.assert_allclose(np.asarray(ev_async["body"]),
+                               np.asarray(ev_sync["body"]), atol=1e-6)
+
+
+def test_mass_conserved_under_randomized_delay_trace():
+    """ACCEPTANCE: with column-stochastic (push) mixing, sum(mu) + mass in
+    flight stays m to f32 tolerance at EVERY tick, for random per-edge
+    delays, 4x speed tiers and a 0.7 duty availability trace."""
+    loss_fn, mask, cu, cv = _quad(m=10)
+    m = cu.shape[0]
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
+                           k_v=1, k_u=2, lr_decay=0.99)
+    prof = profiles.tiered(m, spread=4.0, push_delay_max=3,
+                           availability=0.7, seed=1)
+    rt, s = AsyncRuntime.build(algo, {"body": cu, "head": cv}, prof,
+                               depth=4)
+    tick = jax.jit(lambda s, p, b, e: rt.tick(s, p, b, e))
+    rng = np.random.default_rng(0)
+    b = _batches(cu, cv, 1, 1)
+    bt = _tick_batch(b, 0, 0)                   # any (m, B, ...) batch
+    for t in range(50):
+        P_row = topology.directed_random(jax.random.PRNGKey(100 + t), m, 3)
+        P = topology.from_dense(topology.to_column_stochastic(P_row), k=m)
+        delay = jnp.asarray(rng.integers(0, 4, (m, P.k)), jnp.int32)
+        s, mt = tick(s, P, bt, delay)
+        np.testing.assert_allclose(float(mt["mass_total"]), m, rtol=1e-5)
+    # heterogeneity is real: fast tiers completed more local rounds
+    rounds = np.asarray(s.local_round)
+    assert rounds[:2].min() > rounds[-2:].max()
+    # models stay evaluable mid-flight
+    ev = rt.eval_params(s)
+    assert bool(jnp.isfinite(ev["body"]).all())
+    assert bool(jnp.isfinite(ev["head"]).all())
+
+
+def test_full_model_core_skips_personal_phase():
+    """k_v = 0 (async OSGP/DFedAvgM): all-shared partition, no v-branch;
+    undirected MH mixing is doubly stochastic, so mass stays exactly m."""
+    loss_fn, _, cu, cv = _quad()
+    m = cu.shape[0]
+    opt = SGD(lr=0.05, momentum=0.9)
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn,
+                           mask={"body": True, "head": True},
+                           opt_u=opt, opt_v=opt, k_v=0, k_u=2,
+                           lr_decay=0.99)
+    prof = profiles.tiered(m, spread=2.0)
+    rt, s = AsyncRuntime.build(algo, {"body": cu, "head": cv}, prof,
+                               depth=2)
+    tick = jax.jit(lambda s, p, b: rt.tick(s, p, b))
+    b = _batches(cu, cv, 1, 1)
+    bt = _tick_batch(b, 0, 0)
+    for t in range(8):
+        W = topology.undirected_random(jax.random.PRNGKey(t), m, 2)
+        s, mt = tick(s, W, bt)
+        np.testing.assert_allclose(float(mt["mass_total"]), m, rtol=1e-5)
+    assert int(s.local_round.max()) >= 3
+
+
+def test_runtime_build_guards():
+    loss_fn, mask, cu, cv = _quad()
+    opt = SGD(lr=0.1)
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt,
+                           opt_v=opt)
+    prof = profiles.tiered(8, push_delay_max=5)
+    with pytest.raises(ValueError, match="depth"):
+        AsyncRuntime.build(algo, {"body": cu, "head": cv}, prof, depth=2)
+    algo_mix = dataclasses.replace(algo,
+                                   mix_fn=lambda p, mu, r, P: (p, mu))
+    with pytest.raises(ValueError, match="mix_fn"):
+        AsyncRuntime.build(algo_mix, {"body": cu, "head": cv},
+                           profiles.uniform(8))
+
+
+def test_to_push_sparse_is_lazy_column_stochastic():
+    """The async regime's mixing form: every column sums to 1 (mass
+    conservation) and every sender keeps at least half its mass (delayed
+    push-sum stability), for all the pull constructors."""
+    topos = [topology.directed_random(jax.random.PRNGKey(0), 12, 4),
+             topology.undirected_random(jax.random.PRNGKey(1), 12, 3),
+             topology.ring(8),
+             topology.directed_exponential(8, 3)]
+    for P in topos:
+        A = topology.to_push_sparse(P)
+        D = np.asarray(A.dense())
+        np.testing.assert_allclose(D.sum(0), 1.0, atol=1e-5)
+        assert (D.diagonal() >= 0.5 - 1e-6).all()
+        assert np.array_equal(np.asarray(A.idx), np.asarray(P.idx))
+
+
+# ---------------------------------------------------------------------------
+# simulator integration
+# ---------------------------------------------------------------------------
+ASYNC_SIM = SimConfig(m=6, rounds=2, n_neighbors=2, n_train=16, n_test=8,
+                      batch=8, k_local=2, k_personal=1, runtime="async",
+                      hetero="tiered", speed_spread=3.0, push_delay_max=1)
+
+
+@pytest.mark.parametrize("algo", ["dfedpgp", "osgp", "dfedavgm"])
+def test_run_experiment_async(algo):
+    h = run_experiment(algo, ASYNC_SIM, eval_every=1)
+    assert h["runtime"] == "async"
+    assert np.isfinite(h["final_acc"]) and 0.0 <= h["final_acc"] <= 1.0
+    assert h["vtime"] == sorted(h["vtime"])     # virtual time advances
+    assert h["mean_local_rounds"][-1] > 0.0
+
+
+def test_run_experiment_async_rejections():
+    with pytest.raises(ValueError, match="push-sum"):
+        run_experiment("fedavg", ASYNC_SIM, eval_every=1)
+    with pytest.raises(ValueError, match="step_gates"):
+        run_experiment("dfedpgp", ASYNC_SIM, eval_every=1,
+                       step_gates=np.ones((6, 3), np.float32))
+    with pytest.raises(ValueError, match="runtime"):
+        run_experiment("dfedpgp",
+                       dataclasses.replace(ASYNC_SIM, runtime="warp"),
+                       eval_every=1)
+
+
+def test_run_experiment_rejects_misshapen_step_gates():
+    sim = dataclasses.replace(ASYNC_SIM, runtime="sync")
+    with pytest.raises(ValueError, match="step_gates"):
+        run_experiment("dfedpgp", sim, eval_every=1,
+                       step_gates=np.ones((4, 3), np.float32))
