@@ -49,7 +49,10 @@ def main(quick: bool = False):
     s = sim(**DIR_03, k_local=2, k_personal=1,
             rounds=10 if quick else 30,
             hetero="tiered", speed_spread=SPREAD, push_delay_max=1)
-    algos = ALGOS if not quick else ("dfedpgp", "dfedavgm")
+    # quick = the CI smoke: one algorithm exercises the whole sync-vs-
+    # async machinery; the freed wall-time pays for the E8 codec smoke
+    # (docs/ci.md keeps the total budget flat)
+    algos = ALGOS if not quick else ("dfedpgp",)
     for algo in algos:
         h_sync = run(algo, dataclasses.replace(s, runtime="sync"))
         # EQUAL VIRTUAL TIME, not equal round count: a sync round costs

@@ -1,0 +1,139 @@
+"""E8 — compressed directed gossip: accuracy vs cumulative wire bytes.
+
+The paper pitches directed push as *resource efficient* — clients only
+share with a neighbor subset — but every push in the plain engine still
+ships a full f32 row of the flat buffer.  E8 measures what the wire-codec
+subsystem (repro.compress, docs/compress.md) buys on top: for each codec x
+topology cell, the final personalized accuracy and the CUMULATIVE wire
+bytes of the whole run (every directed non-self edge carries one payload
+per round; payload bytes are the codec's static `row_bytes`).
+
+Reported per cell:
+
+  final_acc      — personalized test accuracy at the end of the run;
+  acc_delta_pt   — accuracy minus the identity-codec cell of the same
+                   (runtime, topology), in points (the matched-accuracy
+                   check: a codec earns its bytes only within ~1pt);
+  wire_mb        — cumulative wire megabytes;
+  reduction_x    — identity-cell bytes / this cell's bytes.
+
+The identity row doubles as the subsystem's parity gate: its run is
+asserted BIT-FOR-BIT equal (stacked personalized params) to a codec-free
+run, and the flag lands in the artifact where
+benchmarks/check_regression.py hard-fails on it.  topk rows' wire bytes
+are deterministic in the config, so the regression gate also pins them
+against the committed BENCH_compress.json.
+
+  PYTHONPATH=src python -m benchmarks.bench_compress [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+
+import jax
+import numpy as np
+
+from .common import DIR_03, emit, run, sim
+
+# (name, SimConfig overrides) — names are the artifact's codec ids.  The
+# sparsifiers run at consensus step size 0.4 (docs/compress.md §Step
+# size: a K-coordinate pipe needs gamma < 1 or error feedback grows
+# faster than it drains; 0.3-0.4 is the stable plateau on this grid);
+# the dense qsgd tracks geometrically at 1.
+CODECS = [
+    ("identity", dict(codec="identity")),
+    ("topk16", dict(codec="topk", codec_ratio=1.0 / 16.0,
+                    codec_gamma=0.4)),
+    ("topk32", dict(codec="topk", codec_ratio=1.0 / 32.0,
+                    codec_gamma=0.4)),
+    ("randk16", dict(codec="randk", codec_ratio=1.0 / 16.0,
+                     codec_gamma=0.4)),
+    ("qsgd4", dict(codec="qsgd", codec_bits=4)),
+    ("qsgd8", dict(codec="qsgd", codec_bits=8)),
+]
+QUICK_CODECS = ("identity", "topk16", "qsgd4")
+TOPOLOGIES = ("random", "exponential")
+
+
+def _params_equal(a, b) -> bool:
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def main(quick: bool = False, out: str | None = None):
+    rows = []
+    base = sim(**DIR_03, k_local=2, k_personal=1,
+               rounds=12 if quick else 30)
+    codecs = [c for c in CODECS if not quick or c[0] in QUICK_CODECS]
+
+    # parity: codec="identity" must be bit-for-bit the codec-free path —
+    # compared PER TOPOLOGY, so every identity row's flag reflects a
+    # comparison that actually ran on its own schedule
+    ident_runs, parity = {}, {}
+    for topo in TOPOLOGIES:
+        h_plain = run("dfedpgp", dataclasses.replace(base, topology=topo),
+                      return_params=True)
+        ident_runs[topo] = run(
+            "dfedpgp", dataclasses.replace(base, topology=topo,
+                                           codec="identity"),
+            return_params=True)
+        parity[topo] = _params_equal(h_plain["params"],
+                                     ident_runs[topo]["params"])
+        ident_runs[topo].pop("params")
+    parity_ok = all(parity.values())
+
+    for topo in TOPOLOGIES:
+        h_ident = ident_runs[topo]
+        base_bytes = h_ident["wire_bytes"][-1]
+        base_acc = h_ident["final_acc"]
+        for name, overrides in codecs:
+            h = h_ident if name == "identity" else run(
+                "dfedpgp", dataclasses.replace(base, topology=topo,
+                                               **overrides))
+            rows.append({
+                "algo": "dfedpgp",
+                "runtime": "sync",
+                "topology": topo,
+                "codec": name,
+                "final_acc": round(h["final_acc"], 4),
+                "acc_delta_pt": round(
+                    (h["final_acc"] - base_acc) * 100.0, 2),
+                "wire_mb": round(h["wire_bytes"][-1] / 1e6, 4),
+                "wire_bytes": h["wire_bytes"][-1],
+                "reduction_x": round(base_bytes
+                                     / max(h["wire_bytes"][-1], 1), 2),
+                "parity_identity_ok": parity[topo]
+                if name == "identity" else None,
+                "wall_s": h["wall_s"],
+            })
+
+    emit("E8_compress", rows,
+         ["algo", "topology", "codec", "final_acc", "acc_delta_pt",
+          "wire_mb", "reduction_x", "parity_identity_ok"])
+    if not parity_ok:
+        print("E8 PARITY FAILURE: codec='identity' diverged from the "
+              "codec-free path")
+    # "matched": no more than 1pt BELOW the identity cell (better is fine)
+    best = max((r for r in rows if r["codec"] != "identity"
+                and r["acc_delta_pt"] >= -1.0),
+               key=lambda r: r["reduction_x"], default=None)
+    if best is not None:
+        print(f"best matched-accuracy codec: {best['codec']} on "
+              f"{best['topology']} — {best['reduction_x']}x fewer wire "
+              f"bytes at {best['acc_delta_pt']:+.2f}pt")
+    if out:
+        with open(out, "w") as f:
+            json.dump({"rows": rows}, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default=None,
+                    help="also write {rows: ...} JSON here (the CI "
+                         "regression-gate artifact)")
+    a = ap.parse_args()
+    main(quick=a.quick, out=a.out)

@@ -14,10 +14,23 @@ BENCH_gossip.json baseline at the repo root:
   must stay within RESIDENT_SLACK of the per-round-flatten round it
   replaced (it should in fact be faster — it skips the pack/unpack).
 
+With --fresh-compress, the E8 wire-codec artifact is gated too
+(docs/compress.md):
+
+- IDENTITY PARITY is a hard gate: codec="identity" must have been
+  bit-for-bit the codec-free path in the fresh run.
+- WIRE BYTES is a hard ceiling for the sparsifying codecs: cumulative
+  bytes are DETERMINISTIC in the config (static payload sizes x the
+  seeded topology schedule), so any fresh topk/randk cell exceeding the
+  committed BENCH_compress.json baseline means the codec or the
+  accounting regressed — no timing noise, no slack needed.
+
 Exit code 0 = pass; 1 = regression, with a per-shape report either way.
 
   PYTHONPATH=src python benchmarks/bench_gossip.py --quick --out fresh.json
-  python benchmarks/check_regression.py --fresh fresh.json
+  PYTHONPATH=src python -m benchmarks.bench_compress --quick --out fresh_c.json
+  python benchmarks/check_regression.py --fresh fresh.json \\
+      --fresh-compress fresh_c.json
 """
 from __future__ import annotations
 
@@ -28,6 +41,7 @@ from pathlib import Path
 
 ROOT = Path(__file__).resolve().parent.parent
 BASELINE = ROOT / "BENCH_gossip.json"
+BASELINE_COMPRESS = ROOT / "BENCH_compress.json"
 
 RATIO_FLOOR = 0.7        # fresh speedup may drop to 70% of baseline
 # The baseline artifact is committed from one machine and CI runs on
@@ -94,15 +108,62 @@ def check(baseline: dict, fresh: dict) -> list:
     return failures
 
 
+def by_cell(report: dict) -> dict:
+    return {(r.get("runtime", "sync"), r["topology"], r["codec"]): r
+            for r in report.get("rows", [])}
+
+
+def check_compress(baseline: dict, fresh: dict) -> list:
+    """E8 gate: identity parity hard-fails; sparsifier wire bytes are
+    deterministic, so fresh bytes must not exceed the committed baseline
+    at any matched (runtime, topology, codec) cell."""
+    failures = []
+    base_rows, fresh_rows = by_cell(baseline), by_cell(fresh)
+    if not fresh_rows:
+        failures.append("fresh compress report has no rows")
+    for cell, row in sorted(fresh_rows.items()):
+        runtime, topo, codec = cell
+        tag = f"{runtime}/{topo}/{codec}"
+        if row.get("parity_identity_ok") is False:
+            failures.append(
+                f"{tag}: identity-codec parity is False — the codec path "
+                f"diverged from the plain mix_flat")
+        if not codec.startswith(("topk", "randk")):
+            continue
+        base = base_rows.get(cell)
+        if base is None:
+            print(f"{tag}: no baseline cell, wire_bytes "
+                  f"{row['wire_bytes']} (unchecked)")
+            continue
+        ok = row["wire_bytes"] <= base["wire_bytes"]
+        print(f"{tag}: wire_bytes {row['wire_bytes']} vs baseline "
+              f"{base['wire_bytes']} {'OK' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"{tag}: wire_bytes {row['wire_bytes']} exceeds the "
+                f"committed baseline {base['wire_bytes']} (payload sizes "
+                f"are static — this is a real regression, not noise)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", type=Path, default=BASELINE,
                     help="committed BENCH_gossip.json")
     ap.add_argument("--fresh", type=Path, required=True,
                     help="artifact of a fresh bench_gossip.py --quick run")
+    ap.add_argument("--baseline-compress", type=Path,
+                    default=BASELINE_COMPRESS,
+                    help="committed BENCH_compress.json")
+    ap.add_argument("--fresh-compress", type=Path, default=None,
+                    help="artifact of a fresh bench_compress.py --quick "
+                         "run (enables the E8 gate)")
     args = ap.parse_args(argv)
 
     failures = check(load(args.baseline), load(args.fresh))
+    if args.fresh_compress is not None:
+        failures += check_compress(load(args.baseline_compress),
+                                   load(args.fresh_compress))
     if failures:
         print("\nBENCH REGRESSION:")
         for f in failures:

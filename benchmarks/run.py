@@ -6,6 +6,7 @@
   E5     bench_neighbors   paper Figure 3
   E6     bench_topology    Remark 2 / Lemma 3 (connectivity; beyond-paper)
   E7     bench_async       sync vs async virtual-time-to-accuracy (§Async)
+  E8     bench_compress    accuracy vs cumulative wire bytes (§Compression)
   G1     bench_gossip      sparse vs dense gossip-step wall time (§Perf)
   R1     roofline          three-term roofline from the dry-run artifacts
 
@@ -28,13 +29,14 @@ def main(argv=None):
     only = set(args.only.split(",")) if args.only else None
 
     from . import (bench_ablation, bench_accuracy, bench_async,
-                   bench_gossip, bench_hetero, bench_neighbors,
-                   bench_topology, roofline)
+                   bench_compress, bench_gossip, bench_hetero,
+                   bench_neighbors, bench_topology, roofline)
 
     suites = [("E1", bench_accuracy), ("E3", bench_hetero),
               ("E4", bench_ablation), ("E5", bench_neighbors),
               ("E6", bench_topology), ("E7", bench_async),
-              ("G1", bench_gossip), ("R1", roofline)]
+              ("E8", bench_compress), ("G1", bench_gossip),
+              ("R1", roofline)]
     t0 = time.time()
     failures = 0
     for tag, mod in suites:

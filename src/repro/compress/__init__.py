@@ -1,0 +1,22 @@
+"""Compressed directed gossip: wire codecs + error feedback
+(docs/compress.md).  The subsystem between the gossip engine and the
+topology: what actually crosses the wire in a push."""
+from .codecs import (
+    KINDS,
+    MU_BYTES,
+    Codec,
+    IdentityCodec,
+    Payload,
+    QSGDCodec,
+    RandKCodec,
+    TopKCodec,
+    index_dtype,
+    make_codec,
+)
+from .feedback import decode, encode_with_feedback, init_ef, init_ref, publish
+
+__all__ = [
+    "KINDS", "MU_BYTES", "Codec", "IdentityCodec", "Payload", "QSGDCodec",
+    "RandKCodec", "TopKCodec", "index_dtype", "make_codec",
+    "decode", "encode_with_feedback", "init_ef", "init_ref", "publish",
+]

@@ -1,0 +1,264 @@
+"""Wire codecs for the resident flat buffer (docs/compress.md).
+
+A codec turns one client's outgoing flat row into a *payload* — the thing
+that actually crosses the wire in a directed push — and back:
+
+    encode(rows, key) -> Payload      decode(payload, d) -> rows
+    row_bytes(d)      -> int          (wire bytes per client push, incl. mu)
+
+All codecs operate on the STACKED (m, d) buffer at once (everything in this
+repo is vmapped over the client axis); `row_bytes` is the static per-client
+wire cost, so cumulative bytes accounting never touches device data.
+
+The four codecs mirror the compression families the DFL literature uses
+(DisPFL's sparse models, QSGD/Taheri et al.'s quantized push-sum):
+
+- `identity` — uncompressed f32 rows.  `exact` is True: decode(encode(x))
+  is bit-for-bit x, so the codec path reduces to today's `mix_flat`.
+- `topk` / `randk` — index+value sparsification at a static `ratio`:
+  K = max(1, int(d * ratio)) entries per row, indices shipped as uint16
+  when d fits (the wire format the bytes accounting reflects).
+- `qsgd` — QSGD-style stochastic quantization: per-row linf scale, `bits`
+  in {4, 8}; 4-bit payloads are genuinely nibble-packed into uint8 so the
+  wire bytes are real, not notional.
+
+Lossy codecs also expose `residual(x, payload) = x - decode(payload)` —
+the quantity error feedback accumulates (compress/feedback.py).  The
+sparsifiers compute it by scatter-zeroing the kept entries, so the fused
+kernel path (kernels/topk_gather.py) never has to materialize the dense
+decoded rows at all.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Protocol, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+
+
+class Payload(NamedTuple):
+    """What one push ships, stacked over clients (a pytree: rides jit).
+
+    values:  (m, K) f32 for sparsifiers; (m, d) f32 identity; (m, d_packed)
+             uint8/int8 for qsgd.
+    indices: (m, K) uint16/int32 column ids (sparsifiers only).
+    scale:   (m, 1) f32 per-row quantization scale (qsgd only).
+    """
+    values: jnp.ndarray
+    indices: Optional[jnp.ndarray] = None
+    scale: Optional[jnp.ndarray] = None
+
+
+@runtime_checkable
+class Codec(Protocol):
+    """The wire-codec protocol (duck-typed; the dataclasses below)."""
+    exact: bool
+
+    def encode(self, rows: jnp.ndarray,
+               key: Optional[jnp.ndarray] = None) -> Payload: ...
+
+    def decode(self, payload: Payload, d: int) -> jnp.ndarray: ...
+
+    def residual(self, rows: jnp.ndarray, payload: Payload) -> jnp.ndarray: ...
+
+    def row_bytes(self, d: int) -> int: ...
+
+
+MU_BYTES = 4          # the push-sum weight rides every payload, f32
+
+
+def index_dtype(d: int):
+    """Wire dtype of sparse column ids: uint16 covers d <= 65535 (every
+    simulation-scale buffer); int32 beyond."""
+    return jnp.uint16 if d <= 0xFFFF else jnp.int32
+
+
+def _index_bytes(d: int) -> int:
+    return 2 if d <= 0xFFFF else 4
+
+
+# ---------------------------------------------------------------------------
+# identity
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class IdentityCodec:
+    """Uncompressed wire format — the parity/regression anchor.  `exact`
+    lets every integration point skip the error-feedback arithmetic and
+    run the plain mix on the original buffer, which is what makes
+    codec="identity" BIT-FOR-BIT equal to the codec-free path."""
+    seed: int = 0
+    exact = True
+
+    def encode(self, rows, key=None):
+        del key
+        return Payload(rows)
+
+    def decode(self, payload, d):
+        del d
+        return payload.values
+
+    def residual(self, rows, payload):
+        del payload
+        return jnp.zeros_like(rows, jnp.float32)
+
+    def row_bytes(self, d: int) -> int:
+        return 4 * d + MU_BYTES
+
+
+# ---------------------------------------------------------------------------
+# sparsification: topk / randk
+# ---------------------------------------------------------------------------
+def _scatter_values(values, indices, d):
+    m = values.shape[0]
+    rows = jnp.arange(m)[:, None]
+    return jnp.zeros((m, d), jnp.float32).at[
+        rows, indices.astype(jnp.int32)].add(
+        values.astype(jnp.float32), mode="drop")
+
+
+def _scatter_zero(x, indices):
+    m = x.shape[0]
+    rows = jnp.arange(m)[:, None]
+    return x.astype(jnp.float32).at[
+        rows, indices.astype(jnp.int32)].set(0.0, mode="drop")
+
+
+@dataclasses.dataclass(frozen=True)
+class _SparseCodec:
+    ratio: float = 1.0 / 16.0
+    seed: int = 0
+    exact = False
+
+    def __post_init__(self):
+        if not 0.0 < self.ratio <= 1.0:
+            raise ValueError(f"sparsifier ratio must be in (0, 1], got "
+                             f"{self.ratio}")
+
+    def k_of(self, d: int) -> int:
+        return max(1, int(d * self.ratio))
+
+    def decode(self, payload, d):
+        return _scatter_values(payload.values, payload.indices, d)
+
+    def residual(self, rows, payload):
+        """x - decode(encode(x)) without the dense decode: the kept entries
+        carry their exact values (distinct indices), so the residual is x
+        with those entries zeroed."""
+        return _scatter_zero(rows, payload.indices)
+
+    def row_bytes(self, d: int) -> int:
+        return self.k_of(d) * (4 + _index_bytes(d)) + MU_BYTES
+
+
+@dataclasses.dataclass(frozen=True)
+class TopKCodec(_SparseCodec):
+    """Keep the K = ratio*d largest-|x| entries per row (deterministic)."""
+
+    def encode(self, rows, key=None):
+        del key
+        x = rows.astype(jnp.float32)
+        d = x.shape[1]
+        _, idx = jax.lax.top_k(jnp.abs(x), self.k_of(d))
+        vals = jnp.take_along_axis(x, idx, axis=1)
+        return Payload(vals, idx.astype(index_dtype(d)))
+
+
+@dataclasses.dataclass(frozen=True)
+class RandKCodec(_SparseCodec):
+    """Keep K uniformly-random entries per row (fresh per key — the round
+    or tick index folds into the key at the call site)."""
+
+    def encode(self, rows, key=None):
+        if key is None:
+            raise ValueError("randk sampling needs a PRNGKey")
+        x = rows.astype(jnp.float32)
+        m, d = x.shape
+        K = self.k_of(d)
+        keys = jax.random.split(key, m)
+        idx = jax.vmap(lambda kk: jax.random.permutation(kk, d)[:K])(keys)
+        vals = jnp.take_along_axis(x, idx, axis=1)
+        return Payload(vals, idx.astype(index_dtype(d)))
+
+
+# ---------------------------------------------------------------------------
+# QSGD-style stochastic quantization
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class QSGDCodec:
+    """Per-row linf scale + `bits`-bit stochastic rounding (QSGD, Alistarh
+    et al.; the quantized push-sum of Taheri et al. the paper cites).
+    bits=8 ships int8 words; bits=4 nibble-packs two values per uint8.
+    Without a key the rounding is deterministic (nearest)."""
+    bits: int = 8
+    seed: int = 0
+    exact = False
+
+    def __post_init__(self):
+        if self.bits not in (4, 8):
+            raise ValueError(f"qsgd bits must be 4 or 8, got {self.bits}")
+
+    @property
+    def levels(self) -> int:
+        return 2 ** (self.bits - 1) - 1          # 7 or 127
+
+    def encode(self, rows, key=None):
+        x = rows.astype(jnp.float32)
+        m, d = x.shape
+        scale = jnp.max(jnp.abs(x), axis=1, keepdims=True)      # (m, 1)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        y = x / safe * self.levels
+        u = (jax.random.uniform(key, (m, d)) if key is not None else 0.5)
+        q = jnp.clip(jnp.floor(y + u), -self.levels, self.levels)
+        q = q.astype(jnp.int32)
+        if self.bits == 8:
+            return Payload(q.astype(jnp.int8), None, scale)
+        # 4-bit: offset to [0, 14] and pack two nibbles per byte
+        q4 = (q + self.levels).astype(jnp.uint8)
+        if d % 2:
+            q4 = jnp.pad(q4, ((0, 0), (0, 1)),
+                         constant_values=self.levels)
+        packed = q4[:, 0::2] | (q4[:, 1::2] << 4)
+        return Payload(packed, None, scale)
+
+    def decode(self, payload, d):
+        scale = payload.scale
+        if self.bits == 8:
+            q = payload.values.astype(jnp.float32)
+        else:
+            packed = payload.values
+            lo = (packed & 0xF).astype(jnp.int32)
+            hi = (packed >> 4).astype(jnp.int32)
+            m = packed.shape[0]
+            q = jnp.stack([lo, hi], axis=2).reshape(m, -1)[:, :d]
+            q = (q - self.levels).astype(jnp.float32)
+        safe = jnp.where(scale > 0, scale, 1.0)
+        return jnp.where(scale > 0, q * safe / self.levels, 0.0)
+
+    def residual(self, rows, payload):
+        return rows.astype(jnp.float32) - self.decode(payload,
+                                                      rows.shape[1])
+
+    def row_bytes(self, d: int) -> int:
+        payload = d if self.bits == 8 else -(-d // 2)
+        return payload + 4 + MU_BYTES            # + f32 scale + mu
+
+
+# ---------------------------------------------------------------------------
+# config-string constructor (SimConfig.codec)
+# ---------------------------------------------------------------------------
+KINDS = ("identity", "topk", "randk", "qsgd")
+
+
+def make_codec(kind: str, *, ratio: float = 1.0 / 16.0, bits: int = 4,
+               seed: int = 0):
+    """One constructor for the SimConfig knob (fl/simulator.py)."""
+    if kind == "identity":
+        return IdentityCodec(seed=seed)
+    if kind == "topk":
+        return TopKCodec(ratio=ratio, seed=seed)
+    if kind == "randk":
+        return RandKCodec(ratio=ratio, seed=seed)
+    if kind == "qsgd":
+        return QSGDCodec(bits=bits, seed=seed)
+    raise ValueError(f"codec kind {kind!r}; known: {KINDS}")

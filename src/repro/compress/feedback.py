@@ -1,0 +1,155 @@
+"""Error-feedback memory for compressed directed gossip (docs/compress.md).
+
+Every client keeps an (m, d_flat)-stacked residual buffer `ef` of what its
+codec dropped; before the next encode the residual is re-added, so the
+compressed stream is a *delayed* — not lossy — view of the true signal:
+
+    x_t   = rows_t + ef_{t-1}
+    p_t   = encode(x_t)
+    ef_t  = x_t - decode(p_t)
+
+Two invariants fall out (tests/test_compress.py):
+
+- **Value conservation.**  decode(p_t) + ef_t == x_t exactly, so across a
+  fire the total transmitted value  sum(decoded in flight) + sum(ef)
+  equals  sum(rows + ef)  — compression moves value between the wire and
+  the memory, it never creates or destroys it.  (The push-sum weight mu is
+  a scalar and NEVER compressed, so sum(mu) + mailbox-mu conservation is
+  untouched by any codec.)
+- **Mean recovery.**  Summing the telescoping series, the time-average of
+  the decoded stream converges to the true signal as long as `ef` stays
+  bounded — the classic EF-SGD argument (Stich et al., Karimireddy et
+  al.), which is what keeps compressed push-sum converging.
+
+`exact` codecs (identity) bypass the arithmetic entirely: the payload is
+the row, the residual identically zero, so the integration points are
+bit-for-bit the uncompressed path.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from .codecs import Payload
+
+
+def init_ef(codec, flat: jnp.ndarray) -> Optional[jnp.ndarray]:
+    """Zero residual memory shaped like the resident buffer; None for
+    exact codecs (nothing is ever dropped)."""
+    if codec is None or codec.exact:
+        return None
+    return jnp.zeros(flat.shape, jnp.float32)
+
+
+def init_ref(codec, flat: jnp.ndarray) -> Optional[jnp.ndarray]:
+    """Reference (tracking) copies for lossy codecs — the publicly agreed
+    reconstruction of each client's row that receivers mix (`publish`);
+    None for exact codecs (the wire IS the row).
+
+    Bootstrapped to the INITIAL rows, the standard CHOCO-style x̂_0 = x_0:
+    first contact ships one full-fidelity copy (the simulator meters
+    those bytes — fl/simulator.py), after which only compressed deltas
+    ever cross the wire.  A zero bootstrap also works but spends the
+    early rounds re-publishing the entire initialization through the
+    codec's narrow pipe, which measurably costs accuracy."""
+    if codec is None or codec.exact:
+        return None
+    return flat.astype(jnp.float32)
+
+
+def encode_with_feedback(codec, ef, rows, key=None, wire_frac=None):
+    """-> (payload, ef').  The PLAIN error-feedback primitive: encode
+    rows + ef, keep what was dropped.  This is the textbook EF-SGD
+    operator (its mean-recovery property is pinned in
+    tests/test_compress.py), kept as a building block — it is NOT the
+    engines' integration point.  Both regimes transmit through `publish`
+    below (delta encoding against reference copies); wiring a new
+    transmission path through this function instead would mix raw
+    decoded payloads, which distorts the iterates under heavy
+    sparsification (see `publish`).
+
+    wire_frac: optional (m,) fraction of each sender's mass that actually
+    rides the wire (1 - its lazy self share).  The self edge never
+    crosses the wire — it carries the FULL-fidelity row — so only the
+    wire fraction of the residual is new, and the home fraction keeps its
+    old pending correction:
+
+        ef' = wire_frac * (x - decode(p)) + (1 - wire_frac) * ef
+
+    With column-stochastic mixing this bookkeeping makes the total value
+    sum(u) + sum(ef) + value-in-flight EXACTLY conserved across a fire
+    (docs/compress.md §Conservation; tests/test_compress.py)."""
+    if codec.exact:
+        return codec.encode(rows, key), ef
+    if ef is None:
+        raise ValueError(
+            f"{type(codec).__name__} is lossy and needs error-feedback "
+            f"memory; allocate it with compress.init_ef")
+    x = rows.astype(jnp.float32) + ef
+    payload = codec.encode(x, key)
+    r = codec.residual(x, payload)
+    if wire_frac is None:
+        return payload, r
+    wf = jnp.clip(wire_frac, 0.0, 1.0)[:, None].astype(jnp.float32)
+    return payload, wf * r + (1.0 - wf) * ef
+
+
+def publish(codec, ef, ref, rows, key=None, wire_frac=None):
+    """One wire crossing with reference tracking -> (payload, ef', ref').
+
+    Direct EF alone is not enough for gossip: receivers would mix the
+    raw decoded payloads — mostly-empty rows under heavy sparsification —
+    and the ITERATES stay distorted even though the time-average is
+    right.  The tracking scheme (CHOCO-Gossip, Koloskova et al.; the
+    quantized directed push-sum of Taheri et al.; EF21 reframes classic
+    error feedback as exactly this) fixes the iterates: every client j
+    carries a public reference copy ref_j that all its receivers agree
+    on, and the wire ships the compressed DELTA against it:
+
+        x   = rows - ref
+        p   = encode(x)
+        ref'= ref + decode(p)          (sender and receivers advance alike)
+        ef' = wire_frac * (x - decode(p))
+
+    Receivers mix the DENSE ref', which converges to the true row as the
+    deltas shrink — so compressed gossip tracks the uncompressed
+    trajectory instead of a sparsified one.  The residual the codec
+    dropped is carried by the REFERENCE LAG (next crossing's delta
+    x' = rows' - ref' contains it in full), which is what "accumulate
+    and re-add before the next encode" means here — an explicit `+ ef`
+    term in x would COUNT THE RESIDUAL TWICE (once in ef, once in the
+    lag) and measurably diverges (tests/test_compress.py).  `ef'` holds
+    the value this crossing did NOT ship — wire_frac of the new lag; the
+    integration points re-absorb the PREVIOUS `ef` through the self
+    share (full fidelity, never on the wire), so the crossing conserves
+    value exactly under column-stochastic weights:
+
+        mixed-out + ef' = sw*rows + ef + (1-sw)*ref' + (1-sw)*(rows-ref')
+                        = rows + ef
+
+    (the reference cancels; docs/compress.md §Conservation).
+    `ref + decode(p)` is computed as `ref + (x - residual)` so
+    sparsifying codecs never materialize a dense decode here either.
+    Exact codecs pass through untouched."""
+    if codec.exact:
+        return codec.encode(rows, key), ef, ref
+    if ef is None or ref is None:
+        raise ValueError(
+            f"{type(codec).__name__} is lossy and needs error-feedback "
+            f"and reference memory; allocate with compress.init_ef / "
+            f"compress.init_ref")
+    x = rows.astype(jnp.float32) - ref
+    payload = codec.encode(x, key)
+    r = codec.residual(x, payload)
+    ref2 = ref + (x - r)                       # ref + decode(p), fused
+    if wire_frac is None:
+        return payload, r, ref2
+    wf = jnp.clip(wire_frac, 0.0, 1.0)[:, None].astype(jnp.float32)
+    return payload, wf * r, ref2
+
+
+def decode(codec, payload: Payload, d: int) -> jnp.ndarray:
+    """Dense decode (receiver side).  The fused kernel path mixes sparse
+    payloads without calling this — see kernels/topk_gather.py."""
+    return codec.decode(payload, d)

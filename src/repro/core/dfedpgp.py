@@ -57,6 +57,12 @@ class FlatDFedPGPState(NamedTuple):
     opt_u: SGDState        # momentum: ONE (m, d_flat) buffer
     opt_v: SGDState        # momentum: personal-leaf tree
     round: jnp.ndarray     # scalar int32
+    # wire-codec memory (docs/compress.md): the error-feedback residual
+    # and the public reference (tracking) copies — (m, d_flat) f32 for
+    # lossy codecs, None otherwise (empty pytree slots — codec-free
+    # states are unchanged)
+    ef: Any = None
+    ref: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -87,6 +93,20 @@ class DFedPGP:
     #   "dense"  — legacy per-leaf einsum against the (m, m) matrix;
     #   "pallas" — the fused gossip_gather kernel (TPU; interpret on CPU).
     gossip: str = "sparse"
+    # optional wire codec for the push-pull payload (repro.compress,
+    # docs/compress.md): what each client's row looks like ON THE WIRE.
+    # Lossy codecs carry error-feedback memory in FlatDFedPGPState.ef;
+    # the identity codec is bit-for-bit the codec-free path.  Resident
+    # path only (round_fn_flat / the async runtime) — the tree-form
+    # round_fn raises.  Mutually exclusive with gossip_dtype (the codec
+    # IS the wire format).
+    codec: Optional[Any] = None
+    # consensus step size for lossy codecs (CHOCO-Gossip): the codec mix
+    # runs on P_g = (1-g) I + g P.  Sparse codecs (topk/randk) can only
+    # publish K coordinates per crossing, so g < 1 slows consensus to the
+    # pipe's delivery rate — without it the error-feedback memory grows
+    # instead of draining (docs/compress.md §Step size).
+    codec_gamma: float = 1.0
 
     # ------------------------------------------------------------------
     def init(self, stacked_params) -> DFedPGPState:
@@ -172,6 +192,10 @@ class DFedPGP:
         P: the round's mixing pattern — a topology.SparseTopology (preferred;
         enables the O(m*k*d) gossip engines) or a dense (m, m) matrix.
         step_gate_u: optional (m, K_u) gates for computation heterogeneity."""
+        if self.codec is not None:
+            raise ValueError("wire codecs ride the resident flat buffer "
+                             "(round_fn_flat / the async runtime); the "
+                             "tree-form round_fn has no payload boundary")
         lr_scale = self.lr_decay ** state.round.astype(jnp.float32)
         if step_gate_u is None:
             shp = jax.tree.leaves(batches["u"])[0].shape[:2]   # (m, K_u)
@@ -215,7 +239,9 @@ class DFedPGP:
         fcs, layout = gossip.FlatClientState.create(stacked_params,
                                                     self.mask, layout)
         _check_uniform_dtype(layout)
+        self._check_codec()
         m = jax.tree.leaves(stacked_params)[0].shape[0]
+        from repro.compress import init_ef, init_ref
         return FlatDFedPGPState(
             flat=fcs.flat,
             personal=fcs.personal,
@@ -223,7 +249,34 @@ class DFedPGP:
             opt_u=SGDState(jnp.zeros_like(fcs.flat)),
             opt_v=SGDState(jax.tree.map(jnp.zeros_like, fcs.personal)),
             round=jnp.zeros((), jnp.int32),
+            ef=init_ef(self.codec, fcs.flat),
+            ref=init_ref(self.codec, fcs.flat),
         ), layout
+
+    def _check_codec(self) -> None:
+        g = float(self.codec_gamma)
+        if self.codec is None or self.codec.exact:
+            # same loud-knob rule as block_m: a consensus step only
+            # exists on the LOSSY codec path — the exact/uncompressed
+            # mixes never blend, so a stray gamma raises instead of
+            # silently running a different experiment than requested
+            if g != 1.0:
+                raise ValueError(
+                    f"codec_gamma={g} only applies to lossy codecs; the "
+                    f"exact/uncompressed mix never blends (drop the knob "
+                    f"or use a lossy codec)")
+            if self.codec is None:
+                return
+        if self.gossip_dtype is not None:
+            raise ValueError("codec and gossip_dtype are mutually "
+                             "exclusive: the codec IS the wire format")
+        # validated here so BOTH regimes reject a bad consensus step at
+        # build time (the async tick would otherwise blend an
+        # extrapolated or degenerate mixing matrix without ever reaching
+        # mix_flat's own check)
+        if not 0.0 < g <= 1.0:
+            raise ValueError(f"codec_gamma must be in (0, 1], got "
+                             f"{self.codec_gamma}")
 
     # ------------------------------------------------------------------
     def local_update_flat(self, flat_row, personal, mu_i, opt_u, opt_v,
@@ -233,16 +286,22 @@ class DFedPGP:
         flat_row: (d_flat,) biased shared row; personal: unstacked personal
         leaves.  The tree form exists only inside loss_fn (unravel at the
         leaf boundary via local.flat_view_loss)."""
-        # ---- v-steps at fixed z^{t,0} (personal gradient only) ----
-        z_shared = layout.unravel_row(
-            (flat_row / mu_i).astype(flat_row.dtype))
-        z_pinned = jax.tree.map(jax.lax.stop_gradient, z_shared)
+        # ---- v-steps at fixed z^{t,0} (personal gradient only).  K_v = 0
+        # (the all-shared OSGP/DFedAvgM cores on this engine) skips the
+        # phase statically: there is no personal part to step and an empty
+        # scan's mean-loss would be NaN ----
+        if jax.tree.leaves(batches_v)[0].shape[0] == 0:
+            loss_v = jnp.zeros((), jnp.float32)
+        else:
+            z_shared = layout.unravel_row(
+                (flat_row / mu_i).astype(flat_row.dtype))
+            z_pinned = jax.tree.map(jax.lax.stop_gradient, z_shared)
 
-        def v_loss(pv, batch):
-            return self.loss_fn(partition.merge(z_pinned, pv), batch)
+            def v_loss(pv, batch):
+                return self.loss_fn(partition.merge(z_pinned, pv), batch)
 
-        personal, opt_v, loss_v = local.sgd_steps(
-            v_loss, self.opt_v, personal, opt_v, batches_v, lr_scale)
+            personal, opt_v, loss_v = local.sgd_steps(
+                v_loss, self.opt_v, personal, opt_v, batches_v, lr_scale)
 
         # ---- u-steps: gradient at z^{t,k} = u^{t,k}/mu, applied to the
         # biased flat row (Algorithm 1 lines 10-11 on the buffer) ----
@@ -359,10 +418,22 @@ class DFedPGP:
             state.flat, state.personal, state.mu, state.opt_u, state.opt_v,
             batches["v"], batches["u"], step_gate_u)
 
-        flat, mu = gossip.mix_flat(P, flat, state.mu, mode=self.gossip,
-                                   wire_dtype=self.gossip_dtype)
+        if self.codec is not None:
+            # one wire crossing per round: the codec key folds the round
+            # index in, so randomized codecs (randk, qsgd) redraw per
+            # round deterministically in (codec.seed, round)
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(self.codec.seed), state.round)
+            flat, mu, ef, ref = gossip.mix_flat(
+                P, flat, state.mu, mode=self.gossip, codec=self.codec,
+                ef=state.ef, ref=state.ref, key=key,
+                codec_gamma=self.codec_gamma)
+        else:
+            flat, mu = gossip.mix_flat(P, flat, state.mu, mode=self.gossip,
+                                       wire_dtype=self.gossip_dtype)
+            ef, ref = state.ef, state.ref
         new_state = FlatDFedPGPState(flat, personal, mu, opt_u, opt_v,
-                                     state.round + 1)
+                                     state.round + 1, ef, ref)
         metrics = {"loss_v": jnp.mean(loss_v), "loss_u": jnp.mean(loss_u),
                    "mu_min": jnp.min(mu), "mu_max": jnp.max(mu)}
         return new_state, metrics
@@ -383,12 +454,18 @@ class DFedPGP:
         fcs, layout = gossip.FlatClientState.create(state.params, self.mask,
                                                     layout)
         _check_uniform_dtype(layout)
+        self._check_codec()
         mom, _ = gossip.FlatClientState.create(state.opt_u.momentum,
                                                self.mask, layout)
         mom_v = partition.split(state.opt_v.momentum, self.mask)[1]
+        from repro.compress import init_ef, init_ref
+        # tree-form states carry no codec memory: a lossy codec starts
+        # from FRESH (zero) error-feedback and reference buffers after
+        # migration
         return FlatDFedPGPState(fcs.flat, fcs.personal, state.mu,
                                 SGDState(mom.flat), SGDState(mom_v),
-                                state.round), layout
+                                state.round, init_ef(self.codec, fcs.flat),
+                                init_ref(self.codec, fcs.flat)), layout
 
     def state_from_flat(self, fstate: FlatDFedPGPState,
                         layout: gossip.FlatLayout) -> DFedPGPState:

@@ -216,8 +216,41 @@ class FlatClientState(NamedTuple):
         return partition.merge(layout.unravel(self.flat), self.personal)
 
 
+def _transmit(P, x: jnp.ndarray, mu: jnp.ndarray, mode: str,
+              block_m=None):
+    """The bare push-pull contraction of (x, mu) — the one code path every
+    mix_flat variant (plain, wire-dtype, codec-decoded) funnels through,
+    so they stay numerics-identical by construction."""
+    sparse = isinstance(P, SparseTopology)
+    if no_sparsity(P):
+        mode = "dense"
+    if mode == "dense" or not sparse:
+        Pd = P.dense() if sparse else P
+        return (jnp.einsum("mn,nd->md", Pd.astype(x.dtype), x),
+                jnp.einsum("mn,n->m", Pd, mu))
+    if mode == "pallas":
+        from repro.kernels import ops
+        return (ops.gossip_gather(P.idx, P.w, x, force="pallas",
+                                  block_m=block_m),
+                mix_rows(P.idx, P.w, mu))
+    return mix_rows(P.idx, P.w, x), mix_rows(P.idx, P.w, mu)
+
+
+def _check_block_m(mode: str, block_m) -> None:
+    """block_m tunes the Pallas kernels' DMA panel height; every other
+    mode has no kernel to tune, so a stray knob raises instead of being
+    silently ignored."""
+    if block_m is not None and mode != "pallas":
+        raise ValueError(
+            f"block_m={block_m} tunes the pallas gossip kernels; mode="
+            f"{mode!r} never launches one (use mode='pallas' or drop the "
+            f"knob)")
+
+
 def mix_flat(P, flat: jnp.ndarray, mu: jnp.ndarray, *,
-             mode: str = "sparse", wire_dtype=None, edge_gate=None):
+             mode: str = "sparse", wire_dtype=None, edge_gate=None,
+             codec=None, ef=None, ref=None, key=None, codec_gamma=1.0,
+             block_m=None):
     """One push-pull transmission directly on the resident buffer:
     flat' = P flat, mu' = P mu — no per-round pack/unpack.  The pallas mode
     hands the buffer to the fused gossip_gather kernel as-is.  mu always
@@ -229,46 +262,136 @@ def mix_flat(P, flat: jnp.ndarray, mu: jnp.ndarray, *,
     (repro.hetero.mailbox): gating an edge off means that neighbor's mass
     simply has not arrived, it is NOT redistributed to the live edges.
     Needs the neighbor-indexed representation, so it requires a
-    SparseTopology (the dense matrix has no (m, k) edge identity)."""
+    SparseTopology (the dense matrix has no (m, k) edge identity).
+
+    codec: optional wire codec (repro.compress, docs/compress.md).  When
+    given, the NON-SELF edges ship compressed DELTAS against each
+    sender's public reference copy (`ref`, error-feedback + tracking:
+    feedback.publish) and receivers mix the dense updated references; the
+    self edge never crosses the wire, so it carries the FULL-fidelity
+    row:
+
+        mixed[i] = P[i,i] * flat[i] + sum_{j != i} P[i,j] * ref'[j]
+
+    The call takes `ef`/`ref` memory and returns TWO extra elements —
+    (mixed, mu', ef', ref').  An `exact` codec (identity) bypasses all of
+    this and runs the plain body on `flat`, bit-for-bit the codec-free
+    path.  Sparse payloads under mode="pallas" mix through the fused
+    kernels/topk_gather.py kernel — the deltas' dense decodes never
+    materialize.  mu is NEVER compressed: push-sum mass conservation is
+    codec-agnostic.
+
+    block_m: optional DMA-panel-height override for the pallas kernels;
+    raises for modes that launch no kernel."""
     if mode not in MODES:
         raise ValueError(f"gossip mode {mode!r}; known: {MODES}")
+    _check_block_m(mode, block_m)
+    if float(codec_gamma) != 1.0 and (codec is None or codec.exact):
+        # same loud-knob rule as block_m: the consensus step only exists
+        # on the lossy codec path
+        raise ValueError(
+            f"codec_gamma={codec_gamma} only applies to lossy codecs; "
+            f"the exact/uncompressed mix never blends")
     sparse = isinstance(P, SparseTopology)
     if edge_gate is not None:
         if not sparse:
             raise ValueError("edge_gate needs a SparseTopology — a dense "
                              "matrix has no per-edge (m, k) identity")
         P = SparseTopology(P.idx, P.w * edge_gate.astype(P.w.dtype))
+    if codec is not None:
+        if wire_dtype is not None:
+            raise ValueError("codec defines the wire format; wire_dtype "
+                             "applies to the uncompressed path only")
+        from repro.compress import feedback
+        if codec.exact:
+            mixed, mu2 = _transmit(P, flat, mu, mode, block_m)
+            return mixed.astype(flat.dtype), mu2, ef, ref
+        # consensus step size gamma (CHOCO-Gossip): the effective mixing
+        # matrix is P_g = (1-g) I + g P — still row-stochastic (and
+        # column-stochastic if P is), so the push-sum de-bias and the
+        # mass ledger are untouched.  g < 1 slows consensus to the rate a
+        # SPARSE pipe can actually deliver; g = 1 is the plain tracked mix
+        g = float(codec_gamma)
+        if not 0.0 < g <= 1.0:
+            raise ValueError(f"codec_gamma must be in (0, 1], got {g}")
+        sw = self_weight_of(P)                                # (m,)
+        sw_g = (1.0 - g) + g * sw
+        payload, ef2, ref2 = feedback.publish(
+            codec, ef, ref, flat, key, wire_frac=1.0 - sw_g)
+        wire = _mix_wire(P, ref, ref2, payload, mode, block_m)
+        # the ACCUMULATED residual re-enters through the self share (full
+        # fidelity — it never rides the wire), so the crossing conserves
+        # value exactly: mixed + ef' = u + ef under column-stochastic
+        # weights, and tracking ships the re-absorbed residual later
+        mixed = sw_g[:, None] * flat.astype(jnp.float32) + ef + g * wire
+        mu2 = (1.0 - g) * mu + g * mix_any(P, mu)
+        return mixed.astype(flat.dtype), mu2, ef2, ref2
     x = flat.astype(wire_dtype) if wire_dtype is not None else flat
-    if no_sparsity(P):
-        mode = "dense"
-    if mode == "dense" or not sparse:
-        Pd = P.dense() if sparse else P
-        mixed = jnp.einsum("mn,nd->md", Pd.astype(x.dtype), x)
-        mu2 = jnp.einsum("mn,n->m", Pd, mu)
-    elif mode == "pallas":
-        from repro.kernels import ops
-        mixed = ops.gossip_gather(P.idx, P.w, x, force="pallas")
-        mu2 = mix_rows(P.idx, P.w, mu)
-    else:
-        mixed = mix_rows(P.idx, P.w, x)
-        mu2 = mix_rows(P.idx, P.w, mu)
+    mixed, mu2 = _transmit(P, x, mu, mode, block_m)
     return mixed.astype(flat.dtype), mu2
+
+
+def self_weight_of(P) -> jnp.ndarray:
+    """(m,) total weight each row places on itself — the share of a mix
+    that never crosses the wire (the codec path keeps it full-fidelity)."""
+    if isinstance(P, SparseTopology):
+        rows = jnp.arange(P.m, dtype=P.idx.dtype)[:, None]
+        return (P.w * (P.idx == rows)).sum(1).astype(jnp.float32)
+    return jnp.diagonal(P).astype(jnp.float32)
+
+
+def wire_only(P):
+    """P with its self edges zeroed — the edges that actually carry
+    payloads.  Same representation in, same out."""
+    if isinstance(P, SparseTopology):
+        rows = jnp.arange(P.m, dtype=P.idx.dtype)[:, None]
+        return SparseTopology(P.idx, jnp.where(P.idx == rows, 0.0, P.w))
+    m = P.shape[0]
+    return P * (1.0 - jnp.eye(m, dtype=P.dtype))
+
+
+def _mix_wire(P, ref_prev, ref_new, payload, mode: str, block_m=None):
+    """sum_{j != i} P[i,j] * ref'[j] — the tracked half of the codec mix,
+    in f32.  On the pallas path the sum splits linearly,
+    P_wire @ ref' = P_wire @ ref + P_wire @ decode(p), so sparse payloads
+    scatter through kernels/topk_gather.py while the reference rides the
+    regular gossip_gather kernel — a dense decode never materializes."""
+    Pw = wire_only(P)
+    sparse = isinstance(Pw, SparseTopology)
+    if sparse and mode == "pallas" and payload.indices is not None \
+            and not no_sparsity(Pw):
+        from repro.kernels import ops
+        d = ref_prev.shape[1]
+        return ops.gossip_gather(Pw.idx, Pw.w, ref_prev, force="pallas",
+                                 block_m=block_m) \
+            + ops.topk_gather(Pw.idx, Pw.w,
+                              payload.values.astype(jnp.float32),
+                              payload.indices, d, force="pallas",
+                              block_m=block_m)
+    if sparse and not no_sparsity(Pw) and mode != "dense":
+        return mix_rows(Pw.idx, Pw.w, ref_new)
+    Pd = Pw.dense() if sparse else Pw
+    return jnp.einsum("mn,nd->md", Pd.astype(jnp.float32), ref_new)
 
 
 # ---------------------------------------------------------------------------
 # round-level entry point
 # ---------------------------------------------------------------------------
 def gossip_mix(params, mu, P, mask, *, mode: str = "sparse",
-               wire_dtype=None):
+               wire_dtype=None, block_m=None):
     """One push-pull transmission of the shared part + the mu update.
 
     P is a SparseTopology (preferred) or a dense (m, m) row-stochastic
     matrix.  A sparse/pallas mode with a dense P falls back to the dense
     path — the neighbor indices are not recoverable inside jit.  Returns
     (params', mu'); mu always mixes in f32 (push-sum de-bias correctness).
+    block_m tunes the pallas kernel's DMA panels; the tree-mode dense and
+    sparse paths launch no kernel, so they raise on a stray knob instead
+    of silently ignoring it.
     """
     if mode not in MODES:
         raise ValueError(f"gossip mode {mode!r}; known: {MODES}")
+    _check_block_m(mode, block_m)
     sparse = isinstance(P, SparseTopology)
     if sparse and not any(jax.tree.leaves(mask)):
         # degenerate all-personal mask: nothing to flatten — only mu moves
@@ -292,7 +415,8 @@ def gossip_mix(params, mu, P, mask, *, mode: str = "sparse",
     flat = flatten_shared(params, mask, dtype=wire_dtype)
     if mode == "pallas":
         from repro.kernels import ops
-        mixed = ops.gossip_gather(P.idx, P.w, flat, force="pallas")
+        mixed = ops.gossip_gather(P.idx, P.w, flat, force="pallas",
+                                  block_m=block_m)
     else:
         mixed = mix_rows(P.idx, P.w, flat)
     return (unflatten_shared(mixed, params, mask),

@@ -142,26 +142,35 @@ def fully_connected(m: int) -> SparseTopology:
 
 
 def to_push_sparse(P: SparseTopology,
-                   self_weight: float = 0.5) -> SparseTopology:
+                   self_weight=0.5) -> SparseTopology:
     """Lazy column-stochastic (push) form of a pull pattern, sparse-native.
 
     Reuses P's edge set but re-weights it so each SENDER j keeps
-    `self_weight` of its mass and splits the rest uniformly over its
+    `self_weight[j]` of its mass and splits the rest uniformly over its
     non-self out-edges (the transposed pull edges):
 
-        w[i, p] = (1 - self_weight) / outdeg(idx[i, p])   for idx[i,p] != i
-        w[i, p] = self_weight (+ the remainder if outdeg == 0)  at the self edge
+        w[i, p] = (1 - self_weight[j]) / outdeg(j),  j = idx[i, p] != i
+        w[i, p] = self_weight[i] (+ the remainder if outdeg == 0)  at the
+                  self edge
 
     Every column sums to 1, so the total push-sum mass is conserved — the
     invariant the async mailbox regime needs (docs/hetero.md).  The lazy
     self share matters there too: a sender that keeps half its mass is
     never yanked onto a stale heavy-mass arrival, which is what makes
     delayed asynchronous push-sum stable (one-peer SGP keeps exactly 1/2).
+
+    self_weight: scalar in [0, 1) or a per-SENDER (m,) array — the
+    staleness-discounted form (ROADMAP async follow-up (a)): a sender
+    whose pushes ride a slow link keeps proportionally more mass at home
+    (`staleness_self_weight`), so its receivers' push-sum weights stop
+    plateauing on mass stuck in flight (tests/test_hetero_async.py).
+
     Jittable: O(m*k), no densify.  Precondition: every row carries a self
     entry (all the constructors in this module do) — the kept share has
     no slot otherwise, which would silently destroy mass; checked loudly
     when the topology is concrete (the host-side schedule path)."""
     m, _ = P.idx.shape
+    sw = jnp.broadcast_to(jnp.asarray(self_weight, jnp.float32), (m,))
     if not isinstance(P.idx, jax.core.Tracer):
         has_self = (np.asarray(P.idx) == np.arange(m)[:, None]).any(1)
         if not bool(has_self.all()):
@@ -170,14 +179,21 @@ def to_push_sparse(P: SparseTopology,
                 f"{np.where(~has_self)[0][:5].tolist()} have none): the "
                 f"sender's kept share would have no slot and its mass "
                 f"would be destroyed")
+        if not isinstance(sw, jax.core.Tracer):
+            swn = np.asarray(sw)
+            if float(swn.min()) < 0.0 or float(swn.max()) >= 1.0:
+                raise ValueError(
+                    f"self_weight must lie in [0, 1) (a sender keeping "
+                    f">= 1 of its mass pushes none); got range "
+                    f"[{float(swn.min())}, {float(swn.max())}]")
     rows = jnp.arange(m, dtype=P.idx.dtype)[:, None]
     self_edge = P.idx == rows
     real = (P.w > 0) & ~self_edge
     outdeg = jnp.zeros((m,), jnp.float32).at[P.idx.reshape(-1)].add(
         real.astype(jnp.float32).reshape(-1))
-    share = (1.0 - self_weight) / jnp.maximum(outdeg, 1.0)
+    share = (1.0 - sw) / jnp.maximum(outdeg, 1.0)
     w = jnp.where(real, jnp.take(share, P.idx), 0.0)
-    w_self = self_weight + (1.0 - self_weight) * (outdeg <= 0)
+    w_self = sw + (1.0 - sw) * (outdeg <= 0)
     # place the kept share on the REAL self edge; rows whose self edge
     # exists only as (self, 0) padding reuse those slots instead (split
     # evenly — the total stays exactly w_self, so columns still sum to 1)
@@ -187,6 +203,24 @@ def to_push_sparse(P: SparseTopology,
     cnt = jnp.maximum(self_slot.sum(1, keepdims=True), 1)
     w = jnp.where(self_slot, w_self[:, None] / cnt, w)
     return SparseTopology(P.idx, w.astype(jnp.float32))
+
+
+def staleness_self_weight(push_delay, base: float = 0.5) -> jnp.ndarray:
+    """Stale-mass discounting (ROADMAP async follow-up (a)): the per-sender
+    lazy self share as a function of the sender's push-delay class.
+
+        self_weight[j] = 1 - (1 - base) / (1 + delay[j])
+
+    A delay-0 sender keeps `base` (the classic 1/2); a delay-d sender
+    keeps more — its pushed share spends ~(1 + d) ticks on the wire, so
+    scaling the PUSHED fraction by 1/(1 + d) keeps the steady-state mass
+    in flight roughly constant per sender instead of growing linearly
+    with delay.  Without the discount, receivers' push-sum weights mu
+    plateau at the mass the slow links hold back
+    (tests/test_hetero_async.py::test_staleness_discount_lifts_plateau).
+    """
+    d = jnp.asarray(push_delay, jnp.float32)
+    return 1.0 - (1.0 - float(base)) / (1.0 + d)
 
 
 def to_column_stochastic(P_row) -> jnp.ndarray:

@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compress
 from repro.core import baselines, dfedpgp, gossip, partition, topology
 from repro.data import ClientData, make_dataset, sample_batches
 from repro.hetero import profiles as hetero_profiles
@@ -72,6 +73,24 @@ class SimConfig:
     push_delay_max: int = 0        # max sender push-delay class, in ticks
     availability: float = 1.0      # duty fraction of availability traces
     mailbox_depth: int = 4         # delivery ring depth (>= delays + 1)
+    # ---- wire codec (repro.compress, docs/compress.md) ----
+    # None = today's uncompressed path; "identity" is its bit-for-bit
+    # codec-form twin; "topk"/"randk" sparsify to codec_ratio, "qsgd"
+    # quantizes to codec_bits — all with error feedback.  Applies to the
+    # push-sum flat engines (dfedpgp/osgp/dfedavgm) in BOTH runtimes;
+    # history gains cumulative "wire_bytes".
+    codec: Optional[str] = None
+    codec_ratio: float = 1.0 / 16.0   # kept fraction for topk/randk
+    codec_bits: int = 4               # qsgd word size (4 or 8)
+    # consensus step size for lossy codecs (CHOCO; docs/compress.md §Step
+    # size): sparse pipes need g < 1 or the error-feedback memory grows
+    # faster than it drains
+    codec_gamma: float = 1.0
+    # stale-mass discounting (ROADMAP async follow-up (a)): scale each
+    # sender's lazy self share by its push-delay class
+    # (topology.staleness_self_weight) so receivers' push-sum weights
+    # stop plateauing on mass stuck in slow links.  Async runtime only.
+    stale_discount: bool = False
 
 
 # algo name -> (constructor kind, context kind)
@@ -86,6 +105,15 @@ UNDIRECTED = ("dfedavgm", "dfedavgm-p", "dispfl")
 # the push-sum de-bias reduces to plain averaging (and under delays it
 # supplies exactly the correction plain DFedAvgM lacks).
 ASYNC_ALGOS = ("dfedpgp", "osgp", "dfedavgm")
+
+
+def make_sim_codec(sim: SimConfig):
+    """The experiment's wire codec from the SimConfig knobs (None = the
+    uncompressed path)."""
+    if sim.codec is None:
+        return None
+    return compress.make_codec(sim.codec, ratio=sim.codec_ratio,
+                               bits=sim.codec_bits, seed=sim.seed)
 
 
 def build_algorithm(name: str, loss_fn, mask, sim: SimConfig):
@@ -118,32 +146,43 @@ def build_algorithm(name: str, loss_fn, mask, sim: SimConfig):
         return dfedpgp.DFedPGP(
             loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
             k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay,
-            gossip=sim.gossip)
+            gossip=sim.gossip, codec=make_sim_codec(sim),
+            codec_gamma=sim.codec_gamma)
     raise ValueError(f"unknown algorithm {name!r}; known: {ALGOS}")
 
 
-def build_async_core(name: str, loss_fn, mask, sim: SimConfig) -> dfedpgp.DFedPGP:
-    """The async runtime's per-algorithm push-sum core.  dfedpgp keeps its
-    partial partition and alternating phases; osgp/dfedavgm gossip the
-    FULL model (all-shared mask, k_v = 0) — their sync round_fns are the
-    k_v = 0 specialization of Algorithm 1, so one engine drives all three.
-    """
+def build_flat_core(name: str, loss_fn, mask,
+                    sim: SimConfig) -> dfedpgp.DFedPGP:
+    """The flat-engine push-sum core behind a DFL algorithm name.  dfedpgp
+    keeps its partial partition and alternating phases; osgp/dfedavgm
+    gossip the FULL model (all-shared mask, k_v = 0) — their sync
+    round_fns are the k_v = 0 specialization of Algorithm 1, so one
+    engine drives all three.  Used by the async runtime for every tick
+    schedule, and by the sync regime when a wire codec is requested
+    (codecs live on the resident flat buffer: docs/compress.md)."""
     if name not in ASYNC_ALGOS:
         raise ValueError(
-            f"runtime='async' supports the DFL push-sum methods "
-            f"{ASYNC_ALGOS}; {name!r} is round-synchronous only")
+            f"the flat push-sum engine drives {ASYNC_ALGOS}; {name!r} "
+            f"has no flat-buffer core")
     opt = SGD(lr=sim.lr, momentum=sim.momentum,
               weight_decay=sim.weight_decay)
+    codec = make_sim_codec(sim)
     if name == "dfedpgp":
         return dfedpgp.DFedPGP(
             loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
             k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay,
-            gossip="pallas" if sim.gossip == "pallas" else "sparse")
+            gossip="pallas" if sim.gossip == "pallas" else "sparse",
+            codec=codec, codec_gamma=sim.codec_gamma)
     all_shared = jax.tree.map(lambda _: True, mask)
     return dfedpgp.DFedPGP(
         loss_fn=loss_fn, mask=all_shared, opt_u=opt, opt_v=opt,
         k_v=0, k_u=sim.k_local + sim.k_personal, lr_decay=sim.lr_decay,
-        gossip="pallas" if sim.gossip == "pallas" else "sparse")
+        gossip="pallas" if sim.gossip == "pallas" else "sparse",
+        codec=codec, codec_gamma=sim.codec_gamma)
+
+
+# the async runtime's historical name for the same constructor
+build_async_core = build_flat_core
 
 
 def make_schedule(name: str, sim: SimConfig) -> topology.TopologySchedule:
@@ -226,15 +265,40 @@ def run_experiment(algo_name: str, sim: SimConfig,
                                 mask, stacked, k_run,
                                 eval_every=eval_every, verbose=verbose,
                                 return_params=return_params)
-    algo = build_algorithm(algo_name, loss_fn, mask, sim)
-    if sim.gossip == "pallas" and algo_name != "dfedpgp":
-        print(f"[simulator] note: gossip='pallas' applies to dfedpgp's "
-              f"flat-buffer engine; {algo_name} gossips via the sparse path")
+    codec = make_sim_codec(sim)
+    if codec is None and sim.codec_gamma != 1.0:
+        raise ValueError(
+            f"codec_gamma={sim.codec_gamma} only applies to lossy "
+            f"codecs; set SimConfig.codec or drop the knob")
+    if codec is not None:
+        if algo_name not in ASYNC_ALGOS:
+            raise ValueError(
+                f"codec={sim.codec!r} rides the push-sum flat engines "
+                f"{ASYNC_ALGOS}; {algo_name!r} has no wire-payload "
+                f"boundary to compress")
+        if algo_name == "dfedpgp" and not sim.resident:
+            raise ValueError("wire codecs live on the resident flat "
+                             "buffer; resident=False has no payload "
+                             "boundary (drop the codec or re-enable "
+                             "resident)")
+    # resident flat buffer: pack the shared part once, here; rounds then
+    # mix the buffer in place (no per-round flatten — docs/gossip.md).
+    # A wire codec routes osgp/dfedavgm through their flat-engine cores
+    # too (the k_v = 0 specialization of Algorithm 1 — the same cores the
+    # async runtime drives), because payloads are rows of the flat buffer.
+    use_flat = (algo_name == "dfedpgp" and sim.resident) or \
+        (codec is not None and algo_name in ("osgp", "dfedavgm"))
+    if codec is not None and algo_name != "dfedpgp":
+        algo = build_flat_core(algo_name, loss_fn, mask, sim)
+    else:
+        algo = build_algorithm(algo_name, loss_fn, mask, sim)
+    is_pgp_engine = isinstance(algo, dfedpgp.DFedPGP)
+    if sim.gossip == "pallas" and not is_pgp_engine:
+        print(f"[simulator] note: gossip='pallas' applies to the "
+              f"flat-buffer engine; {algo_name} gossips via the sparse "
+              f"path")
     schedule = None if (algo_name in CFL or algo_name == "local") else \
         make_schedule(algo_name, sim)
-    # resident flat buffer: pack the shared part once, here; rounds then
-    # mix the buffer in place (no per-round flatten — docs/gossip.md)
-    use_flat = algo_name == "dfedpgp" and sim.resident
     if use_flat:
         state, layout = algo.init_flat(stacked)
         eval_params = lambda s: algo.eval_params_flat(s, layout)
@@ -244,17 +308,36 @@ def run_experiment(algo_name: str, sim: SimConfig,
 
     @jax.jit
     def round_jit(state, ctx, batches, gate):
-        if algo_name == "dfedpgp":
-            b = {"v": jax.tree.map(lambda a: a[:, :sim.k_personal], batches),
-                 "u": jax.tree.map(lambda a: a[:, sim.k_personal:], batches)}
+        if is_pgp_engine:
+            kv = algo.k_v
+            b = {"v": jax.tree.map(lambda a: a[:, :kv], batches),
+                 "u": jax.tree.map(lambda a: a[:, kv:], batches)}
             if use_flat:
                 return algo.round_fn_flat(state, ctx, b, layout,
                                           step_gate_u=gate)
             return algo.round_fn(state, ctx, b, step_gate_u=gate)
         return algo.round_fn(state, ctx, batches, step_gate=gate)
 
+    # wire-bytes accounting (docs/compress.md): every directed non-self
+    # edge of the round's topology carries one client payload; the
+    # per-payload byte cost is static, so the meter is pure host-side
+    # bookkeeping (codec=None meters the uncompressed f32 wire)
+    wire_rb = None
+    if schedule is not None:
+        full_mask = jax.tree.map(lambda _: True, mask)
+        wire_mask = mask if algo_name in ("dfedpgp", "dfedavgm-p") \
+            else full_mask
+        d_wire = gossip.flat_width(stacked, wire_mask)
+        wire_rb = codec.row_bytes(d_wire) if codec is not None \
+            else 4 * d_wire + compress.MU_BYTES
+
     history = {"round": [], "acc": [], "loss": [], "vtime": [],
-               "algo": algo_name, "runtime": "sync"}
+               "wire_bytes": [], "algo": algo_name, "runtime": "sync"}
+    # lossy codecs track against bootstrapped reference copies
+    # (compress.init_ref): first contact ships one full-fidelity row per
+    # client — metered here, so the reduction claims stay honest
+    wire_total = 0 if codec is None or codec.exact \
+        else sim.m * 4 * d_wire
     t0 = time.time()
     for r in range(sim.rounds):
         k_r = jax.random.fold_in(k_run, r)
@@ -270,6 +353,10 @@ def run_experiment(algo_name: str, sim: SimConfig,
         else:
             topo = schedule.at(r)
             ctx = topo.dense() if sim.gossip == "dense" else topo
+            idx_np, w_np = np.asarray(topo.idx), np.asarray(topo.w)
+            edges = int(((w_np > 0)
+                         & (idx_np != np.arange(sim.m)[:, None])).sum())
+            wire_total += edges * wire_rb
         if step_gates is not None:
             gate = jnp.asarray(step_gates, jnp.float32)
             gate_u = gate[:, :sim.k_local] if algo_name == "dfedpgp" else \
@@ -286,6 +373,7 @@ def run_experiment(algo_name: str, sim: SimConfig,
             # SLOWEST participant; homogeneous cost 1 here — heterogeneous
             # sync cost is charged by the caller (benchmarks/bench_async)
             history["vtime"].append(float((r + 1) * k_total))
+            history["wire_bytes"].append(wire_total)
             history["loss"].append(float(metrics["loss"]
                                          if "loss" in metrics
                                          else metrics["loss_u"]))
@@ -302,7 +390,8 @@ def run_experiment(algo_name: str, sim: SimConfig,
 # async regime: virtual-clock gossip (docs/hetero.md)
 # ---------------------------------------------------------------------------
 def async_round(runtime: AsyncRuntime, tick_fn, state, schedule, data,
-                sim: SimConfig, k_run, tick0: int):
+                sim: SimConfig, k_run, tick0: int,
+                wire_edges=jnp.zeros((), jnp.int32)):
     """Advance one sync-equivalent WINDOW of k_v + k_u ticks.
 
     Each tick: sample one minibatch per client (only active clients
@@ -314,22 +403,31 @@ def async_round(runtime: AsyncRuntime, tick_fn, state, schedule, data,
     same fast-client step budget as a sync run of `rounds` rounds — but
     slow clients simply complete fewer rounds instead of stalling the
     population (the barrier the sync regime pays every round is gone).
-    Returns (state, last_metrics, next_tick)."""
+    Returns (state, last_metrics, next_tick, wire_edges') — wire_edges
+    accumulates the payload-carrying directed edges (bytes accounting,
+    docs/compress.md) lazily on device."""
     metrics = {}
+    # the async regime fires over the LAZY PUSH form of the tick's
+    # graph (to_push_sparse: sender keeps 1/2, splits 1/2 over its
+    # out-edges).  Column-stochastic => total mass is conserved under
+    # any delay trace, and the 1/2 self share keeps a fast client
+    # from being yanked onto a stale heavy-mass arrival — the classic
+    # stability condition of delayed push-sum (one-peer SGP keeps
+    # exactly 1/2).  The pull form stays the sync regime's mix.
+    # stale_discount raises the slow-link senders' kept share
+    # (topology.staleness_self_weight) so their receivers' push-sum
+    # weights stop plateauing on mass stuck in flight.
+    self_weight = topology.staleness_self_weight(
+        runtime.profile.push_delay) if sim.stale_discount else 0.5
     for t in range(tick0, tick0 + runtime.k_total):
         k_t = jax.random.fold_in(k_run, t)
         b = sample_batches(k_t, data, 1, sim.batch)
         batch = jax.tree.map(lambda a: a[:, 0], b)
-        # the async regime fires over the LAZY PUSH form of the tick's
-        # graph (to_push_sparse: sender keeps 1/2, splits 1/2 over its
-        # out-edges).  Column-stochastic => total mass is conserved under
-        # any delay trace, and the 1/2 self share keeps a fast client
-        # from being yanked onto a stale heavy-mass arrival — the classic
-        # stability condition of delayed push-sum (one-peer SGP keeps
-        # exactly 1/2).  The pull form stays the sync regime's mix.
-        topo = topology.to_push_sparse(schedule.at(t))
+        topo = topology.to_push_sparse(schedule.at(t),
+                                       self_weight=self_weight)
         state, metrics = tick_fn(state, topo, batch)
-    return state, metrics, tick0 + runtime.k_total
+        wire_edges = wire_edges + metrics["wire_edges"]
+    return state, metrics, tick0 + runtime.k_total, wire_edges
 
 
 def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
@@ -342,26 +440,35 @@ def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
         sim.hetero, sim.m, spread=sim.speed_spread,
         push_delay_max=sim.push_delay_max, availability=sim.availability,
         seed=sim.seed)
-    core = build_async_core(algo_name, loss_fn, mask, sim)
+    core = build_flat_core(algo_name, loss_fn, mask, sim)
     depth = max(sim.mailbox_depth, sim.push_delay_max + 1)
     runtime, state = AsyncRuntime.build(core, stacked, profile, depth=depth)
     schedule = make_schedule(algo_name, sim)
     tick_fn = jax.jit(lambda s, topo, b: runtime.tick(s, topo, b))
+    wire_rb = core.codec.row_bytes(runtime.layout.d_flat) \
+        if core.codec is not None \
+        else 4 * runtime.layout.d_flat + compress.MU_BYTES
+    # reference-bootstrap bytes (see the sync meter above)
+    wire_boot = 0 if core.codec is None or core.codec.exact \
+        else sim.m * 4 * runtime.layout.d_flat
 
     history = {"round": [], "acc": [], "loss": [], "vtime": [],
-               "mean_local_rounds": [], "algo": algo_name,
-               "runtime": "async"}
+               "wire_bytes": [], "mean_local_rounds": [],
+               "algo": algo_name, "runtime": "async"}
     t0 = time.time()
     tick = 0
+    wire_edges = jnp.zeros((), jnp.int32)
     for r in range(sim.rounds):
-        state, metrics, tick = async_round(runtime, tick_fn, state,
-                                           schedule, data, sim, k_run,
-                                           tick)
+        state, metrics, tick, wire_edges = async_round(
+            runtime, tick_fn, state, schedule, data, sim, k_run, tick,
+            wire_edges)
         if (r + 1) % eval_every == 0 or r == sim.rounds - 1:
             acc, _ = evaluate(runtime.eval_params(state), data, model_cfg)
             history["round"].append(r + 1)
             history["acc"].append(acc)
             history["vtime"].append(float(metrics["vtime"]))
+            history["wire_bytes"].append(int(wire_edges) * wire_rb
+                                         + wire_boot)
             history["loss"].append(float(metrics["loss"]))
             history["mean_local_rounds"].append(
                 float(jnp.mean(state.local_round.astype(jnp.float32))))

@@ -111,6 +111,83 @@ def push(mail: Mailbox, P: SparseTopology, flat: jnp.ndarray,
     return Mailbox(slots_flat, slots_mu, mail.inbox_flat, mail.inbox_mu)
 
 
+def push_payload(mail: Mailbox, P: SparseTopology, flat: jnp.ndarray,
+                 ef_prev, ref_prev, ref_new, payload, mu: jnp.ndarray,
+                 fired: jnp.ndarray, edge_delay: jnp.ndarray, tick, *,
+                 mode: str = "sparse",
+                 n_groups: int | None = None) -> Mailbox:
+    """`push` for COMPRESSED fires (docs/compress.md): only the WIRE
+    edges ship codec payloads — the sender's lazy self share never leaves
+    the machine, so it enters the ring at FULL fidelity (delay 0, like
+    `push`'s self edge) TOGETHER with the sender's accumulated residual
+    memory ef (re-absorbed into its own mass, which is what makes the
+    value ledger exact), while every non-self edge contributes the
+    sender's updated public REFERENCE copy (tracking: the wire carried a
+    compressed delta, `compress.publish` advanced ref by its decode):
+
+        slot += w_self * flat + ef   (self edges, exact)
+        slot += w[i,j] * ref'[j]     (non-self edges, per delay group)
+
+    The caller (hetero.runtime) runs `compress.publish` exactly once per
+    fire — this function must NOT re-encode per delay group (that would
+    consume the codec memory once per group).  mu is never compressed:
+    each delay group moves  sum_j w[i,j]*gate*mu_j  into its slot exactly
+    as `push` does, so the push-sum mass invariant is untouched, and the
+    value ledger  sum(u) + sum(ef) + value-in-flight  is conserved
+    exactly (docs/compress.md §Conservation).
+
+    Sparse payloads under mode="pallas" split linearly —
+    w @ ref' = w @ ref + w @ decode(p) — so the delta scatter-accumulates
+    through kernels/topk_gather.py and the reference rides gossip_gather;
+    dense decodes never materialize."""
+    if not isinstance(P, SparseTopology):
+        raise ValueError("mailbox push needs a SparseTopology (per-edge "
+                         "delays have no dense-matrix form)")
+    n_groups = mail.depth if n_groups is None else n_groups
+    if not 1 <= n_groups <= mail.depth:
+        raise ValueError(f"n_groups {n_groups} outside [1, depth="
+                         f"{mail.depth}]")
+    d = mail.slots_flat.shape[2]
+    m = flat.shape[0]
+    fired_g = jnp.take(fired, P.idx, axis=0)               # (m, k)
+    rows = jnp.arange(m, dtype=P.idx.dtype)[:, None]
+    w_wire = jnp.where(P.idx == rows, 0.0, P.w)
+    use_kernel = (mode == "pallas" and payload.indices is not None
+                  and not gossip.no_sparsity(P))
+    slots_flat, slots_mu = mail.slots_flat, mail.slots_mu
+    # self share + re-absorbed residual: full fidelity, delay 0 (the
+    # runtime forces self edges to delay 0 — a retained share never rides
+    # the wire)
+    sw = gossip.self_weight_of(P)
+    self_contrib = jnp.where(fired[:, None],
+                             sw[:, None] * flat.astype(jnp.float32)
+                             + ef_prev, 0.0)
+    slot0 = jnp.mod(tick + 1, mail.depth)
+    slots_flat = slots_flat.at[slot0].add(
+        self_contrib.astype(slots_flat.dtype))
+    for delta in range(n_groups):
+        gate = (fired_g & (edge_delay == delta)).astype(P.w.dtype)
+        wg = w_wire * gate
+        if use_kernel:
+            from repro.kernels import ops
+            got_f = ops.gossip_gather(P.idx, wg, ref_prev,
+                                      force="pallas") \
+                + ops.topk_gather(P.idx, wg,
+                                  payload.values.astype(jnp.float32),
+                                  payload.indices, d, force="pallas")
+        else:
+            # mix_any is THE sparsity dispatch (densifies no_sparsity)
+            got_f = gossip.mix_any(SparseTopology(P.idx, wg),
+                                   ref_new.astype(jnp.float32))
+        # mu: uncompressed, full edge set (self included) — exactly `push`
+        got_mu = gossip.mix_any(SparseTopology(P.idx, P.w * gate), mu)
+        slot = jnp.mod(tick + 1 + delta, mail.depth)
+        slots_flat = slots_flat.at[slot].add(
+            got_f.astype(slots_flat.dtype))
+        slots_mu = slots_mu.at[slot].add(got_mu)
+    return Mailbox(slots_flat, slots_mu, mail.inbox_flat, mail.inbox_mu)
+
+
 def drain(mail: Mailbox, who: jnp.ndarray):
     """Hand the inbox rows of `who` (m,) bool to their recipients.
     Returns (mail', got_flat (m, d_flat), got_mu (m,)) — got rows are zero

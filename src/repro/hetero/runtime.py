@@ -56,6 +56,11 @@ class AsyncState(NamedTuple):
     local_round: jnp.ndarray   # (m,) int32 completed local rounds
     clock: vclock.ClockState
     mail: mbox.Mailbox
+    # wire-codec memory (docs/compress.md): error-feedback residual and
+    # public reference copies — (m, d_flat) f32 for lossy codecs, None
+    # otherwise
+    ef: Any = None
+    ref: Any = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -98,7 +103,8 @@ class AsyncRuntime:
             phase=jnp.zeros((m,), jnp.int32),
             local_round=jnp.zeros((m,), jnp.int32),
             clock=vclock.init_clock(m),
-            mail=mbox.create(m, layout.d_flat, depth, fstate.flat.dtype))
+            mail=mbox.create(m, layout.d_flat, depth, fstate.flat.dtype),
+            ef=fstate.ef, ref=fstate.ref)
         return cls(algo, layout, profile, depth, need), state
 
     @property
@@ -178,13 +184,59 @@ class AsyncRuntime:
         self_edge = P.idx == jnp.arange(m, dtype=P.idx.dtype)[:, None]
         edge_delay = jnp.where(self_edge, 0, edge_delay)
         # most ticks nobody fires (uniform: 1 in k_total); the all-zero
-        # gated mixes would be exact no-ops, so skip them entirely
-        mail = jax.lax.cond(
-            jnp.any(fired),
-            lambda mm: mbox.push(mm, P, flat, mu, fired, edge_delay,
-                                 state.clock.t, mode=self._mix_mode(),
-                                 n_groups=groups),
-            lambda mm: mm, mail)
+        # gated mixes would be exact no-ops, so skip them entirely.  With
+        # a LOSSY wire codec the fire is the wire crossing: the firing
+        # clients' rows are encode→decoded exactly once (error feedback
+        # consumed here, refilled with the new residual) and the mailbox
+        # receives the decoded payloads; an exact codec (identity) takes
+        # the uncompressed branch bit-for-bit.  mu is never compressed.
+        codec = self.algo.codec
+        if codec is None or codec.exact:
+            mail = jax.lax.cond(
+                jnp.any(fired),
+                lambda mm: mbox.push(mm, P, flat, mu, fired, edge_delay,
+                                     state.clock.t, mode=self._mix_mode(),
+                                     n_groups=groups),
+                lambda mm: mm, mail)
+            ef, ref = state.ef, state.ref
+        else:
+            from repro.compress import feedback
+
+            # consensus step size (CHOCO; docs/compress.md §Step size):
+            # fires ride P_g = (1-g) I + g P — still column-stochastic,
+            # so the mailbox mass ledger is untouched.  The blend puts
+            # the extra (1-g) on the rows' self slots.
+            g = float(self.algo.codec_gamma)
+            if g != 1.0:
+                rows_g = jnp.arange(m, dtype=P.idx.dtype)[:, None]
+                is_self = P.idx == rows_g
+                cnt = jnp.maximum(is_self.sum(1, keepdims=True), 1)
+                P = SparseTopology(
+                    P.idx, g * P.w + (1.0 - g) * is_self / cnt)
+
+            def fire_push(carry):
+                mm, ef0, ref0 = carry
+                key_t = jax.random.fold_in(
+                    jax.random.PRNGKey(codec.seed), state.clock.t)
+                # the lazy self share never rides the wire — only the
+                # wire fraction of the residual is refreshed
+                wire_frac = 1.0 - gossip.self_weight_of(P)
+                payload, ef2, ref2 = feedback.publish(
+                    codec, ef0, ref0, flat, key_t, wire_frac=wire_frac)
+                # only the FIRING clients transmit: their codec memory is
+                # consumed and refilled; everyone else keeps theirs
+                ef1 = jnp.where(fired[:, None], ef2, ef0)
+                ref1 = jnp.where(fired[:, None], ref2, ref0)
+                mm = mbox.push_payload(mm, P, flat, ef0, ref0, ref1,
+                                       payload, mu, fired, edge_delay,
+                                       state.clock.t,
+                                       mode=self._mix_mode(),
+                                       n_groups=groups)
+                return mm, ef1, ref1
+
+            mail, ef, ref = jax.lax.cond(
+                jnp.any(fired), fire_push, lambda c: c,
+                (mail, state.ef, state.ref))
         flat = jnp.where(fired[:, None], 0.0, flat)
         mu = jnp.where(fired, 0.0, mu)
 
@@ -192,16 +244,23 @@ class AsyncRuntime:
         clk = vclock.advance(state.clock, active, prof)
 
         n_active = jnp.sum(active)
+        # directed non-self edges that carried a payload this tick — the
+        # wire-bytes accounting unit (bytes = wire_edges * codec row bytes,
+        # multiplied in on the host: docs/compress.md)
+        nonself = (P.idx != jnp.arange(m, dtype=P.idx.dtype)[:, None]) \
+            & (P.w > 0)
         metrics = {
             "loss": jnp.sum(jnp.where(active, loss, 0.0))
             / jnp.maximum(n_active, 1).astype(loss.dtype),
             "n_active": n_active,
             "n_fired": jnp.sum(fired),
+            "wire_edges": jnp.sum(jnp.take(fired, P.idx, axis=0)
+                                  & nonself),
             "mass_total": pushsum.total_mass(mu, mbox.mass(mail)),
             "vtime": clk.t.astype(jnp.float32),
         }
         new_state = AsyncState(flat, personal, mu, opt_u, opt_v, phase,
-                               local_round, clk, mail)
+                               local_round, clk, mail, ef, ref)
         return new_state, metrics
 
     # ------------------------------------------------------------------

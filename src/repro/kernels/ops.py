@@ -17,6 +17,7 @@ from .flash_attention import flash_attention_pallas
 from .gossip_gather import gossip_gather_pallas
 from .pushsum_mix import pushsum_mix_pallas
 from .rglru import rglru_pallas
+from .topk_gather import topk_gather_pallas
 
 
 def _on_tpu() -> bool:
@@ -31,15 +32,38 @@ def pushsum_mix(P, U, force: str = "auto"):
     return ref.pushsum_mix_ref(P, U)
 
 
-@functools.partial(jax.jit, static_argnames=("force",))
-def gossip_gather(idx, w, U, force: str = "auto"):
+@functools.partial(jax.jit, static_argnames=("force", "block_m"))
+def gossip_gather(idx, w, U, force: str = "auto", block_m: int | None = None):
     """out[i] = sum_j w[i,j] * U[idx[i,j]] — the sparse gossip transmission
     over the flat client buffer. force: auto|pallas|ref.  On CPU, `auto`
     uses the jnp oracle; `pallas` runs the kernel in interpret mode (slow,
-    validation only)."""
+    validation only).  block_m tunes the kernel's DMA panel height and is
+    only meaningful on the pallas path — a ref dispatch with block_m set
+    raises instead of silently ignoring the knob."""
     if force == "pallas" or (force == "auto" and _on_tpu()):
-        return gossip_gather_pallas(idx, w, U, interpret=not _on_tpu())
+        return gossip_gather_pallas(idx, w, U, interpret=not _on_tpu(),
+                                    block_m=block_m)
+    if block_m is not None:
+        raise ValueError("block_m tunes the pallas kernel; this call "
+                         "dispatched to the jnp oracle (force='pallas' to "
+                         "run the kernel)")
     return ref.gossip_gather_ref(idx, w, U)
+
+
+@functools.partial(jax.jit, static_argnames=("d", "force", "block_m"))
+def topk_gather(idx, w, values, cols, d: int, force: str = "auto",
+                block_m: int | None = None):
+    """Compressed gossip mix: out[i] = sum_j w[i,j] * decode(payload[
+    idx[i,j]]) for sparse (column, value) payloads, WITHOUT materializing
+    dense decoded rows on the pallas path. force: auto|pallas|ref."""
+    if force == "pallas" or (force == "auto" and _on_tpu()):
+        return topk_gather_pallas(idx, w, values, cols, d,
+                                  interpret=not _on_tpu(), block_m=block_m)
+    if block_m is not None:
+        raise ValueError("block_m tunes the pallas kernel; this call "
+                         "dispatched to the jnp oracle (force='pallas' to "
+                         "run the kernel)")
+    return ref.topk_gather_ref(idx, w, values, cols, d)
 
 
 def flash_attention(q, k, v, *, window: int = 0, scale=None,

@@ -23,6 +23,20 @@ def gossip_gather_ref(idx: jnp.ndarray, w: jnp.ndarray,
     return jnp.einsum("mk,mkd->md", w.astype(jnp.float32), G).astype(U.dtype)
 
 
+def topk_gather_ref(idx: jnp.ndarray, w: jnp.ndarray, values: jnp.ndarray,
+                    cols: jnp.ndarray, d: int) -> jnp.ndarray:
+    """Dense-decode oracle for the compressed gossip mix: scatter each
+    row's (column, value) payload into a dense (m, d) buffer, then the
+    plain neighbor gather.  The Pallas kernel computes the same sum
+    without materializing the decoded buffer."""
+    m = values.shape[0]
+    rows = jnp.arange(m)[:, None]
+    dec = jnp.zeros((m, d), jnp.float32).at[
+        rows, cols.astype(jnp.int32)].add(
+        values.astype(jnp.float32), mode="drop")
+    return gossip_gather_ref(idx, w, dec).astype(values.dtype)
+
+
 def flash_attention_ref(q, k, v, *, window: int = 0, scale=None):
     """Causal (optionally sliding-window) GQA attention, full-matrix math."""
     B, S, H, hd = q.shape

@@ -1,0 +1,135 @@
+"""Pallas TPU kernel: neighbor top-k payload gather + scatter-accumulate.
+
+The compressed gossip transmission (docs/compress.md): each neighbor j
+publishes a sparse payload — K (column, value) pairs per row — and the mix
+
+    out[i, c] = sum_{j < k} w[i, j] * sum_{p < K}
+                vals[idx[i, j], p] * [cols[idx[i, j], p] == c]
+
+scatter-accumulates the payloads straight into the f32 output accumulator
+WITHOUT ever materializing the dense decoded rows (the jnp fallback in
+`ref.topk_gather_ref` decodes densely first — O(m*d) extra HBM traffic and
+memory the kernel never pays).
+
+Structure mirrors `gossip_gather.py` (same grid, same manual-DMA gather):
+
+- grid (m/block_m, d_panels, k) with k innermost so the f32 accumulator
+  lives in VMEM across the neighbor axis;
+- the (m, k) neighbor table rides in SMEM via scalar prefetch; the payload
+  arrays stay whole in HBM (`pl.ANY`) and each grid step DMAs the
+  `block_m` neighbors' (K,) value and column rows, all copies in flight
+  before the first wait;
+- the scatter is TPU-vectorized as K masked FMAs: column ids compare
+  against the panel's broadcasted iota — one (block_m, block_d) vector op
+  per payload slot, no per-element stores.
+
+K is padded to the 128-lane quantum with (column = d_pad, value = 0)
+entries — out-of-panel columns, zero contribution.  `interpret=True` runs
+the same body on CPU (the validation path in this container, like every
+kernel here).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gossip_gather import BD, _default_block_m
+
+KP = 128            # payload-slot padding quantum (lanes)
+
+
+def _scatter_kernel(idx_ref, w_ref, v_ref, c_ref, out_ref, vals_ref,
+                    cols_ref, acc_ref, sems):
+    # idx_ref, w_ref: (mp, k) scalar-prefetch (SMEM).  v_ref/c_ref: the
+    # WHOLE (m, Kp) payload arrays in HBM/ANY; the kernel gathers the
+    # panel's block_m neighbor payloads itself.
+    i = pl.program_id(0)
+    dt = pl.program_id(1)
+    j = pl.program_id(2)
+    k = pl.num_programs(2)
+    bm, Kp = vals_ref.shape
+    bd = acc_ref.shape[1]
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    def copy(src_ref, dst_ref, r, s):
+        return pltpu.make_async_copy(
+            src_ref.at[idx_ref[i * bm + r, j]], dst_ref.at[r], sems.at[r, s])
+
+    for r in range(bm):
+        copy(v_ref, vals_ref, r, 0).start()
+        copy(c_ref, cols_ref, r, 1).start()
+    for r in range(bm):
+        copy(v_ref, vals_ref, r, 0).wait()
+        copy(c_ref, cols_ref, r, 1).wait()
+
+    wcol = jnp.stack([w_ref[i * bm + r, j] for r in range(bm)])    # (bm,)
+    panel_cols = dt * bd + jax.lax.broadcasted_iota(jnp.int32, (1, bd), 1)
+    acc = acc_ref[...]
+    for p in range(Kp):
+        wv = wcol * vals_ref[:, p].astype(jnp.float32)             # (bm,)
+        hit = cols_ref[:, p][:, None] == panel_cols                # (bm, bd)
+        acc = acc + wv[:, None] * hit.astype(jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(j == k - 1)
+    def _flush():
+        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+
+
+def topk_gather_pallas(idx: jnp.ndarray, w: jnp.ndarray,
+                       values: jnp.ndarray, cols: jnp.ndarray, d: int,
+                       block_d: int = BD, block_m: int | None = None,
+                       interpret: bool = False):
+    """out[i] = sum_j w[i,j] * scatter(values[idx[i,j]], cols[idx[i,j]]).
+
+    idx: (m, k) int32 in-neighbor ids; w: (m, k) weights (cast to f32);
+    values: (m, K) payload values (any float dtype); cols: (m, K) column
+    ids (any int dtype; uint16 wire format welcome); d: dense row width.
+    Returns (m, d) in the values dtype, accumulated in f32.
+    """
+    m, k = idx.shape
+    mv, K = values.shape
+    assert mv == m and cols.shape == (m, K), (idx.shape, values.shape,
+                                              cols.shape)
+    block_m = _default_block_m(values.dtype) if block_m is None else block_m
+    mp = -(-m // block_m) * block_m
+    dp = max(-(-d // block_d) * block_d, block_d)
+    Kp = max(-(-K // KP) * KP, KP)
+    if mp != m:
+        idx = jnp.concatenate(
+            [idx, jnp.zeros((mp - m, k), idx.dtype)], axis=0)
+        w = jnp.concatenate([w, jnp.zeros((mp - m, k), w.dtype)], axis=0)
+    if Kp != K:
+        values = jnp.concatenate(
+            [values, jnp.zeros((m, Kp - K), values.dtype)], axis=1)
+        cols = jnp.concatenate(
+            [cols.astype(jnp.int32),
+             jnp.full((m, Kp - K), dp, jnp.int32)], axis=1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,                   # idx, w ride in SMEM
+        grid=(mp // block_m, dp // block_d, k),  # k innermost: accumulate
+        in_specs=[
+            pl.BlockSpec(memory_space=pl.ANY),   # values whole, DMA-gathered
+            pl.BlockSpec(memory_space=pl.ANY),   # cols whole, DMA-gathered
+        ],
+        out_specs=pl.BlockSpec((block_m, block_d),
+                               lambda i, dt, j, idx_ref, w_ref: (i, dt)),
+        scratch_shapes=[pltpu.VMEM((block_m, Kp), values.dtype),
+                        pltpu.VMEM((block_m, Kp), jnp.int32),
+                        pltpu.VMEM((block_m, block_d), jnp.float32),
+                        pltpu.SemaphoreType.DMA((block_m, 2))],
+    )
+    out = pl.pallas_call(
+        _scatter_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((mp, dp), values.dtype),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), w.astype(jnp.float32), values,
+      cols.astype(jnp.int32))
+    return out[:m, :d]

@@ -1,0 +1,546 @@
+"""Compressed directed gossip (docs/compress.md): codecs, error feedback
++ reference tracking, the mix_flat codec path, the topk_gather kernel, and
+the two acceptance contracts — codec="identity" bit-for-bit equal to the
+codec-free engine (sync AND async), and push-sum mass + value conservation
+under lossy codecs at every tick."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import compress
+from repro.core import dfedpgp, gossip, topology
+from repro.fl.simulator import SimConfig, run_experiment
+from repro.hetero import mailbox as mbox
+from repro.hetero import profiles
+from repro.hetero.runtime import AsyncRuntime
+from repro.kernels import ops, ref
+from repro.kernels.topk_gather import topk_gather_pallas
+from repro.optim import SGD
+
+
+# ---------------------------------------------------------------------------
+# codecs
+# ---------------------------------------------------------------------------
+def _rows(m=9, d=260, seed=0):
+    return jax.random.normal(jax.random.PRNGKey(seed), (m, d))
+
+
+def test_identity_codec_is_exact_bitwise():
+    x = _rows()
+    c = compress.make_codec("identity")
+    assert c.exact
+    p = c.encode(x)
+    np.testing.assert_array_equal(np.asarray(c.decode(p, x.shape[1])),
+                                  np.asarray(x))
+    assert c.row_bytes(100) == 404
+
+
+def test_topk_keeps_largest_and_residual_is_exact():
+    x = _rows()
+    c = compress.make_codec("topk", ratio=0.1)
+    K = c.k_of(260)
+    p = c.encode(x)
+    dec = c.decode(p, 260)
+    assert p.indices.dtype == jnp.uint16          # wire format, d < 2^16
+    assert int((np.asarray(dec) != 0).sum(1).max()) <= K
+    # kept entries are the K largest |x| per row
+    kept = np.sort(np.abs(np.asarray(dec)), axis=1)[:, -K:]
+    want = np.sort(np.abs(np.asarray(x)), axis=1)[:, -K:]
+    np.testing.assert_allclose(kept, want)
+    # residual == x - decode, computed without the dense decode
+    np.testing.assert_array_equal(np.asarray(c.residual(x, p)),
+                                  np.asarray(x - dec))
+
+
+def test_randk_residual_and_determinism():
+    x = _rows()
+    c = compress.make_codec("randk", ratio=0.1)
+    key = jax.random.PRNGKey(3)
+    p1, p2 = c.encode(x, key), c.encode(x, key)
+    np.testing.assert_array_equal(np.asarray(p1.indices),
+                                  np.asarray(p2.indices))
+    np.testing.assert_array_equal(
+        np.asarray(c.residual(x, p1)),
+        np.asarray(x - c.decode(p1, 260)))
+    with pytest.raises(ValueError, match="PRNGKey"):
+        c.encode(x)
+
+
+@pytest.mark.parametrize("bits", [4, 8])
+def test_qsgd_quantization_bound_and_packing(bits):
+    x = _rows(d=261)                              # odd d: nibble padding
+    c = compress.make_codec("qsgd", bits=bits)
+    p = c.encode(x, jax.random.PRNGKey(0))
+    dec = np.asarray(c.decode(p, 261))
+    step = np.abs(np.asarray(x)).max(1, keepdims=True) / c.levels
+    assert (np.abs(dec - np.asarray(x)) <= step * (1 + 1e-6)).all()
+    if bits == 4:
+        assert p.values.dtype == jnp.uint8
+        assert p.values.shape == (9, 131)         # two nibbles per byte
+    # deterministic (nearest) rounding without a key
+    np.testing.assert_array_equal(np.asarray(c.decode(c.encode(x), 261)),
+                                  np.asarray(c.decode(c.encode(x), 261)))
+
+
+def test_qsgd_zero_row_is_safe():
+    x = jnp.zeros((3, 16))
+    c = compress.make_codec("qsgd", bits=8)
+    dec = c.decode(c.encode(x, jax.random.PRNGKey(0)), 16)
+    np.testing.assert_array_equal(np.asarray(dec), 0.0)
+
+
+def test_row_bytes_reductions():
+    ident = compress.make_codec("identity")
+    d = 13328
+    assert ident.row_bytes(d) / compress.make_codec(
+        "topk", ratio=1 / 16).row_bytes(d) > 8.0
+    assert ident.row_bytes(d) / compress.make_codec(
+        "qsgd", bits=4).row_bytes(d) > 7.9
+    with pytest.raises(ValueError, match="ratio"):
+        compress.make_codec("topk", ratio=1.5)
+    with pytest.raises(ValueError, match="bits"):
+        compress.make_codec("qsgd", bits=3)
+    with pytest.raises(ValueError, match="known"):
+        compress.make_codec("zip")
+
+
+# ---------------------------------------------------------------------------
+# error feedback + tracking
+# ---------------------------------------------------------------------------
+def test_error_feedback_mean_recovery():
+    """Summing the telescoping series, the time-average of the decoded
+    stream recovers the true signal (the classic EF property)."""
+    x = _rows(m=4, d=128)
+    for kind in ("topk", "qsgd"):
+        c = compress.make_codec(kind, ratio=0.1, bits=4)
+        ef = compress.init_ef(c, x)
+        acc = jnp.zeros_like(x)
+        for t in range(60):
+            p, ef = compress.encode_with_feedback(
+                c, ef, x, jax.random.fold_in(jax.random.PRNGKey(0), t))
+            acc = acc + c.decode(p, 128)
+        assert float(jnp.abs(acc / 60 - x).max()) < 0.2, kind
+
+
+def test_publish_tracking_reference_converges_on_static_rows():
+    """ref' chases a FIXED row set: after enough crossings the public
+    copies match the true rows (delta pipe + EF drain everything)."""
+    x = _rows(m=4, d=128)
+    c = compress.make_codec("topk", ratio=0.25)
+    ef, refc = compress.init_ef(c, x), jnp.zeros_like(x)
+    for t in range(30):
+        _, ef, refc = compress.publish(c, ef, refc, x)
+    assert float(jnp.abs(refc - x).max()) < 1e-4
+
+
+def test_publish_exact_codec_passthrough():
+    x = _rows(m=4, d=32)
+    c = compress.make_codec("identity")
+    p, ef, refc = compress.publish(c, None, None, x)
+    assert ef is None and refc is None
+    np.testing.assert_array_equal(np.asarray(p.values), np.asarray(x))
+    with pytest.raises(ValueError, match="lossy"):
+        compress.publish(compress.make_codec("topk"), None, None, x)
+
+
+# ---------------------------------------------------------------------------
+# topk_gather kernel
+# ---------------------------------------------------------------------------
+def _payload_inputs(m, k, d, K, seed=0):
+    key = jax.random.PRNGKey(seed)
+    idx = jax.random.randint(key, (m, k), 0, m, jnp.int32)
+    w = jax.random.uniform(jax.random.fold_in(key, 1), (m, k))
+    w = w / w.sum(1, keepdims=True)
+    vals = jax.random.normal(jax.random.fold_in(key, 2), (m, K))
+    cols = jax.vmap(lambda kk: jax.random.permutation(kk, d)[:K])(
+        jax.random.split(jax.random.fold_in(key, 3), m))
+    return idx, w, vals, cols.astype(jnp.uint16 if d <= 0xFFFF
+                                     else jnp.int32)
+
+
+# m not multiple of 8, d not multiple of 512, K odd / K=1 edge
+@pytest.mark.parametrize("m,k,d,K", [(5, 2, 64, 3), (33, 4, 1100, 17),
+                                     (8, 1, 512, 1), (17, 3, 129, 129),
+                                     (16, 4, 700, 44)])
+def test_topk_gather_kernel_sweep(m, k, d, K):
+    idx, w, vals, cols = _payload_inputs(m, k, d, K)
+    got = topk_gather_pallas(idx, w, vals, cols, d, interpret=True)
+    want = ref.topk_gather_ref(idx, w, vals, cols, d)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_topk_gather_matches_dense_decode_mix():
+    """kernel == decode-then-gossip_gather (the dense oracle)."""
+    m, d = 12, 300
+    x = _rows(m, d, seed=5)
+    c = compress.make_codec("topk", ratio=0.1)
+    p = c.encode(x)
+    topo = topology.directed_random(jax.random.PRNGKey(1), m, 3)
+    got = topk_gather_pallas(topo.idx, topo.w, p.values, p.indices, d,
+                             interpret=True)
+    want = ref.gossip_gather_ref(topo.idx, topo.w, c.decode(p, d))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_topk_gather_ops_dispatch_and_block_m():
+    idx, w, vals, cols = _payload_inputs(9, 3, 260, 8)
+    want = ref.topk_gather_ref(idx, w, vals, cols, 260)
+    np.testing.assert_allclose(
+        np.asarray(ops.topk_gather(idx, w, vals, cols, 260,
+                                   force="pallas")),
+        np.asarray(want), rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(
+        np.asarray(ops.topk_gather(idx, w, vals, cols, 260)),
+        np.asarray(want), rtol=1e-6, atol=1e-6)
+    # block_m threads through to the kernel...
+    np.testing.assert_allclose(
+        np.asarray(ops.topk_gather(idx, w, vals, cols, 260,
+                                   force="pallas", block_m=16)),
+        np.asarray(want), rtol=1e-5, atol=1e-5)
+    # ...and raises loudly when no kernel runs (satellite: no silent knob)
+    with pytest.raises(ValueError, match="block_m"):
+        ops.topk_gather(idx, w, vals, cols, 260, force="ref", block_m=16)
+    with pytest.raises(ValueError, match="block_m"):
+        ops.gossip_gather(idx, w, _rows(9, 260), force="ref", block_m=16)
+
+
+def test_gossip_mix_block_m_knob():
+    """Satellite fix: tree-mode dense/sparse gossip has no kernel — a
+    stray block_m raises instead of being silently ignored; the pallas
+    mode threads it through."""
+    m = 8
+    P = topology.directed_random(jax.random.PRNGKey(0), m, 3)
+    params = {"a": jax.random.normal(jax.random.PRNGKey(1), (m, 6))}
+    mu = jnp.ones((m,))
+    mask = {"a": True}
+    for mode in ("dense", "sparse"):
+        with pytest.raises(ValueError, match="block_m"):
+            gossip.gossip_mix(params, mu, P, mask, mode=mode, block_m=8)
+        with pytest.raises(ValueError, match="block_m"):
+            gossip.mix_flat(P, params["a"], mu, mode=mode, block_m=8)
+    p_pal, mu_pal = gossip.gossip_mix(params, mu, P, mask, mode="pallas",
+                                      block_m=16)
+    p_sp, mu_sp = gossip.gossip_mix(params, mu, P, mask, mode="sparse")
+    np.testing.assert_allclose(np.asarray(p_pal["a"]),
+                               np.asarray(p_sp["a"]), rtol=1e-5,
+                               atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# mix_flat codec path
+# ---------------------------------------------------------------------------
+def test_mix_flat_identity_codec_bitwise_all_modes():
+    m, d = 10, 96
+    flat = _rows(m, d)
+    mu = jax.random.uniform(jax.random.PRNGKey(2), (m,)) + 0.5
+    P = topology.directed_random(jax.random.PRNGKey(0), m, 3)
+    ident = compress.make_codec("identity")
+    for mode in ("dense", "sparse", "pallas"):
+        want_f, want_mu = gossip.mix_flat(P, flat, mu, mode=mode)
+        got_f, got_mu, ef, refc = gossip.mix_flat(
+            P, flat, mu, mode=mode, codec=ident)
+        np.testing.assert_array_equal(np.asarray(got_f),
+                                      np.asarray(want_f))
+        np.testing.assert_array_equal(np.asarray(got_mu),
+                                      np.asarray(want_mu))
+        assert ef is None and refc is None
+
+
+def test_mix_flat_codec_matches_tracked_oracle():
+    """The codec mix == sw*u + P_wire @ ref' with publish's memory — and
+    the pallas kernel path matches the sparse path."""
+    m, d = 12, 260
+    flat = _rows(m, d)
+    mu = jnp.ones((m,))
+    P = topology.directed_random(jax.random.PRNGKey(7), m, 4)
+    c = compress.make_codec("topk", ratio=0.1)
+    ef = compress.init_ef(c, flat)
+    refc = jnp.zeros((m, d))
+    key = jax.random.PRNGKey(9)
+
+    sw = gossip.self_weight_of(P)
+    _, ef_want, ref_want = compress.publish(c, ef, refc, flat, key,
+                                            wire_frac=1.0 - sw)
+    Pw = gossip.wire_only(P)
+    want = sw[:, None] * flat + gossip.mix_rows(Pw.idx, Pw.w, ref_want)
+
+    got, mu2, ef2, ref2 = gossip.mix_flat(P, flat, mu, mode="sparse",
+                                          codec=c, ef=ef, ref=refc,
+                                          key=key)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(ef2), np.asarray(ef_want))
+    np.testing.assert_array_equal(np.asarray(ref2), np.asarray(ref_want))
+
+    got_p, _, _, _ = gossip.mix_flat(P, flat, mu, mode="pallas",
+                                     codec=c, ef=ef, ref=refc, key=key)
+    np.testing.assert_allclose(np.asarray(got_p), np.asarray(got),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_mix_flat_codec_value_conservation_column_stochastic():
+    """Across a column-stochastic crossing, sum(mixed) + sum(ef') ==
+    sum(flat + ef) per coordinate — the reference cancels out of the
+    ledger and the old residual re-enters through the self share:
+    compression moves value between the wire and the residual memory, it
+    never creates or destroys it."""
+    m, d = 10, 64
+    flat = _rows(m, d)
+    mu = jnp.ones((m,))
+    P = topology.to_push_sparse(
+        topology.directed_random(jax.random.PRNGKey(3), m, 3))
+    for kind, gamma in (("topk", 1.0), ("topk", 0.5), ("qsgd", 1.0)):
+        c = compress.make_codec(kind, ratio=0.1, bits=4)
+        ef = jax.random.normal(jax.random.PRNGKey(4), (m, d)) * 0.1
+        refc = jax.random.normal(jax.random.PRNGKey(5), (m, d))
+        mixed, mu2, ef2, _ = gossip.mix_flat(
+            P, flat, mu, mode="sparse", codec=c, ef=ef, ref=refc,
+            key=jax.random.PRNGKey(6), codec_gamma=gamma)
+        np.testing.assert_allclose(
+            np.asarray(mixed.sum(0) + ef2.sum(0)),
+            np.asarray(flat.sum(0) + ef.sum(0)), rtol=2e-4, atol=2e-4)
+        # mu is never compressed: column-stochastic => mass preserved
+        np.testing.assert_allclose(float(mu2.sum()), m, rtol=1e-6)
+
+
+def test_push_payload_crossing_ledger_exact():
+    """One compressed fire into the mailbox: everything the crossing adds
+    to the ring plus the fired senders' new residual memory equals the
+    fired rows PLUS their old residuals exactly — even mid-tracking
+    (ref != u), with delays."""
+    m, d = 8, 48
+    flat = _rows(m, d, seed=7)
+    refc = flat + jax.random.normal(jax.random.PRNGKey(8), (m, d)) * 0.3
+    ef = jax.random.normal(jax.random.PRNGKey(10), (m, d)) * 0.05
+    mu = jnp.ones((m,))
+    P = topology.to_push_sparse(
+        topology.directed_random(jax.random.PRNGKey(9), m, 3))
+    c = compress.make_codec("topk", ratio=0.2)
+    fired = jnp.asarray([True, False] * 4)
+    sw = gossip.self_weight_of(P)
+    payload, ef2, ref2 = compress.publish(c, ef, refc, flat,
+                                          wire_frac=1.0 - sw)
+    mail = mbox.create(m, d, depth=4)
+    delay = jnp.asarray(
+        np.random.default_rng(0).integers(0, 4, (m, P.k)), jnp.int32)
+    rows = jnp.arange(m)[:, None]
+    delay = jnp.where(P.idx == rows, 0, delay)
+    mail2 = mbox.push_payload(mail, P, flat, ef, refc, ref2, payload, mu,
+                              fired, delay, tick=0, n_groups=4)
+    pushed = (mail2.slots_flat.sum(0) - mail.slots_flat.sum(0)).sum(0)
+    kept = jnp.where(fired[:, None], ef2, 0.0).sum(0)
+    want = jnp.where(fired[:, None], flat + ef, 0.0).sum(0)
+    np.testing.assert_allclose(np.asarray(pushed + kept),
+                               np.asarray(want), rtol=1e-5, atol=1e-5)
+    # mu mass moved == fired senders' mu, exactly
+    np.testing.assert_allclose(float(mail2.slots_mu.sum()),
+                               float(jnp.where(fired, mu, 0.0).sum()),
+                               rtol=1e-6)
+
+
+def test_mix_flat_codec_guards():
+    m, d = 6, 32
+    flat = _rows(m, d)
+    mu = jnp.ones((m,))
+    P = topology.ring(m)
+    c = compress.make_codec("topk")
+    ef, refc = compress.init_ef(c, flat), jnp.zeros((m, d))
+    with pytest.raises(ValueError, match="wire_dtype"):
+        gossip.mix_flat(P, flat, mu, codec=c, ef=ef, ref=refc,
+                        wire_dtype="bfloat16")
+    with pytest.raises(ValueError, match="codec_gamma"):
+        gossip.mix_flat(P, flat, mu, codec=c, ef=ef, ref=refc,
+                        codec_gamma=0.0)
+
+
+# ---------------------------------------------------------------------------
+# sync engine: acceptance + integration
+# ---------------------------------------------------------------------------
+def _quad(m=8, d=6, dp=3):
+    key = jax.random.PRNGKey(0)
+    cu = jax.random.normal(key, (m, d))
+    cv = jax.random.normal(jax.random.fold_in(key, 1), (m, dp))
+
+    def loss_fn(p, b):
+        return jnp.sum((p["body"] - b["tu"][0]) ** 2) + \
+            jnp.sum((p["head"] - b["tv"][0]) ** 2)
+
+    return loss_fn, {"body": True, "head": False}, cu, cv
+
+
+def _batches(cu, cv, kv, ku):
+    rep = lambda x, k: jnp.repeat(x[:, None], k, 1)[..., None, :]
+    return {"v": {"tu": rep(cu, kv), "tv": rep(cv, kv)},
+            "u": {"tu": rep(cu, ku), "tv": rep(cv, ku)}}
+
+
+def test_sync_identity_codec_bitwise_three_rounds():
+    """ACCEPTANCE: codec='identity' is bit-for-bit the codec-free
+    resident path — params, mu and BOTH momenta over 3 rounds."""
+    loss_fn, mask, cu, cv = _quad()
+    m = cu.shape[0]
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    mk = lambda codec: dfedpgp.DFedPGP(
+        loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt, k_v=1, k_u=2,
+        lr_decay=0.99, codec=codec)
+    a0, a1 = mk(None), mk(compress.make_codec("identity"))
+    params = {"body": cu, "head": cv}
+    s0, layout = a0.init_flat(params)
+    s1, _ = a1.init_flat(params)
+    sched = topology.TopologySchedule.random(m, 3, seed=11)
+    b = _batches(cu, cv, 1, 2)
+    for r in range(3):
+        s0, _ = a0.round_fn_flat(s0, sched.at(r), b, layout)
+        s1, _ = a1.round_fn_flat(s1, sched.at(r), b, layout)
+    np.testing.assert_array_equal(np.asarray(s0.flat), np.asarray(s1.flat))
+    np.testing.assert_array_equal(np.asarray(s0.mu), np.asarray(s1.mu))
+    np.testing.assert_array_equal(np.asarray(s0.opt_u.momentum),
+                                  np.asarray(s1.opt_u.momentum))
+    np.testing.assert_array_equal(
+        np.asarray(s0.opt_v.momentum["head"]),
+        np.asarray(s1.opt_v.momentum["head"]))
+
+
+SYNC_SIM = SimConfig(m=6, rounds=2, n_neighbors=2, n_train=16, n_test=8,
+                     batch=8, k_local=2, k_personal=1)
+
+
+@pytest.mark.parametrize("algo", ["dfedpgp", "osgp", "dfedavgm"])
+@pytest.mark.parametrize("codec", ["topk", "qsgd"])
+def test_run_experiment_sync_codec(algo, codec):
+    h = run_experiment(algo, dataclasses.replace(
+        SYNC_SIM, codec=codec, codec_gamma=0.5), eval_every=1)
+    assert np.isfinite(h["final_acc"])
+    assert h["wire_bytes"] == sorted(h["wire_bytes"])
+    ident = run_experiment(algo, dataclasses.replace(
+        SYNC_SIM, codec="identity"), eval_every=1)
+    assert h["wire_bytes"][-1] < ident["wire_bytes"][-1]
+
+
+def test_run_experiment_codec_guards():
+    with pytest.raises(ValueError, match="codec"):
+        run_experiment("fedavg", dataclasses.replace(
+            SYNC_SIM, codec="topk"), eval_every=1)
+    with pytest.raises(ValueError, match="resident"):
+        run_experiment("dfedpgp", dataclasses.replace(
+            SYNC_SIM, codec="topk", resident=False), eval_every=1)
+
+
+def test_tree_round_fn_rejects_codec():
+    loss_fn, mask, cu, cv = _quad()
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask,
+                           codec=compress.make_codec("topk"))
+    state = algo.init({"body": cu, "head": cv})
+    with pytest.raises(ValueError, match="resident"):
+        algo.round_fn(state, topology.ring(cu.shape[0]),
+                      _batches(cu, cv, 1, 5))
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask,
+                        codec=compress.make_codec("topk"),
+                        gossip_dtype="bfloat16").init_flat(
+            {"body": cu, "head": cv})
+    # bad consensus step is rejected at BUILD time, so the async runtime
+    # (which never reaches mix_flat's own check) refuses it too
+    with pytest.raises(ValueError, match="codec_gamma"):
+        dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask,
+                        codec=compress.make_codec("topk"),
+                        codec_gamma=1.5).init_flat(
+            {"body": cu, "head": cv})
+
+
+# ---------------------------------------------------------------------------
+# async engine: acceptance
+# ---------------------------------------------------------------------------
+def _tick_batch(b, t, k_v):
+    src = b["v"] if t < k_v else b["u"]
+    off = t if t < k_v else t - k_v
+    return {k: v[:, off] for k, v in src.items()}
+
+
+def test_async_identity_codec_bitwise():
+    """ACCEPTANCE: the identity codec's async trajectory — buffer, mu,
+    momenta, mailbox — is bit-for-bit the codec-free runtime."""
+    loss_fn, mask, cu, cv = _quad()
+    m = cu.shape[0]
+    opt = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
+    mk = lambda codec: dfedpgp.DFedPGP(
+        loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt, k_v=1, k_u=2,
+        lr_decay=0.99, codec=codec)
+    params = {"body": cu, "head": cv}
+    prof = profiles.tiered(m, spread=3.0, push_delay_max=2)
+    rt0, s0 = AsyncRuntime.build(mk(None), params, prof, depth=3)
+    rt1, s1 = AsyncRuntime.build(mk(compress.make_codec("identity")),
+                                 params, prof, depth=3)
+    sched = topology.TopologySchedule.random(m, 3, seed=5)
+    b = _batches(cu, cv, 1, 2)
+    t0 = jax.jit(lambda s, p, x: rt0.tick(s, p, x))
+    t1 = jax.jit(lambda s, p, x: rt1.tick(s, p, x))
+    for t in range(9):
+        topo = topology.to_push_sparse(sched.at(t))
+        bt = _tick_batch(b, t % 3, 1)
+        s0, _ = t0(s0, topo, bt)
+        s1, _ = t1(s1, topo, bt)
+    np.testing.assert_array_equal(np.asarray(s0.flat), np.asarray(s1.flat))
+    np.testing.assert_array_equal(np.asarray(s0.mu), np.asarray(s1.mu))
+    np.testing.assert_array_equal(np.asarray(s0.mail.slots_flat),
+                                  np.asarray(s1.mail.slots_flat))
+    np.testing.assert_array_equal(np.asarray(s0.opt_u.momentum),
+                                  np.asarray(s1.opt_u.momentum))
+
+
+@pytest.mark.parametrize("kind,gamma", [("topk", 1.0), ("topk", 0.5),
+                                        ("qsgd", 1.0)])
+def test_async_lossy_codec_mass_and_value_conserved(kind, gamma):
+    """ACCEPTANCE: under topk/qsgd with error feedback, sum(mu) + mailbox
+    mass == m to f32 tolerance at EVERY tick; and with frozen local
+    steps (lr=0, wd=0) the VALUE ledger sum(u) + sum(ef) + in-flight is
+    conserved too (compression never creates or destroys value)."""
+    loss_fn, mask, cu, cv = _quad(m=10)
+    m = cu.shape[0]
+    opt = SGD(lr=0.0, momentum=0.9, weight_decay=0.0)
+    algo = dfedpgp.DFedPGP(
+        loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt, k_v=1, k_u=2,
+        lr_decay=0.99, codec=compress.make_codec(kind, ratio=0.1, bits=4),
+        codec_gamma=gamma)
+    prof = profiles.tiered(m, spread=4.0, push_delay_max=3,
+                           availability=0.7, seed=1)
+    rt, s = AsyncRuntime.build(algo, {"body": cu, "head": cv}, prof,
+                               depth=4)
+    # perturb the tracking state so fires ship NON-trivial deltas: the
+    # ledger must stay exact mid-tracking, not just at the bootstrap
+    s = s._replace(ref=s.ref + 0.3 * jax.random.normal(
+        jax.random.PRNGKey(42), s.ref.shape))
+    value0 = float(s.flat.sum() + s.ef.sum())
+    tick = jax.jit(lambda s, p, b: rt.tick(s, p, b))
+    b = _batches(cu, cv, 1, 1)
+    bt = _tick_batch(b, 0, 0)
+    for t in range(40):
+        topo = topology.to_push_sparse(
+            topology.directed_random(jax.random.PRNGKey(200 + t), m, 3))
+        s, mt = tick(s, topo, bt)
+        np.testing.assert_allclose(float(mt["mass_total"]), m, rtol=1e-5)
+        mail_f, _ = mbox.in_flight(s.mail)
+        value = float(s.flat.sum() + s.ef.sum() + mail_f.sum())
+        np.testing.assert_allclose(value, value0, rtol=1e-4, atol=1e-3)
+    ev = rt.eval_params(s)
+    assert bool(jnp.isfinite(ev["body"]).all())
+
+
+ASYNC_SIM = SimConfig(m=6, rounds=2, n_neighbors=2, n_train=16, n_test=8,
+                      batch=8, k_local=2, k_personal=1, runtime="async",
+                      hetero="tiered", speed_spread=3.0, push_delay_max=1)
+
+
+@pytest.mark.parametrize("algo", ["dfedpgp", "osgp", "dfedavgm"])
+def test_run_experiment_async_codec(algo):
+    h = run_experiment(algo, dataclasses.replace(
+        ASYNC_SIM, codec="topk", codec_gamma=0.5), eval_every=1)
+    assert np.isfinite(h["final_acc"])
+    ident = run_experiment(algo, dataclasses.replace(
+        ASYNC_SIM, codec="identity"), eval_every=1)
+    assert 0 < h["wire_bytes"][-1] < ident["wire_bytes"][-1]

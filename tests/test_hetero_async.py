@@ -283,6 +283,74 @@ def test_runtime_build_guards():
                            profiles.uniform(8))
 
 
+def test_to_push_sparse_vector_self_weight_and_validation():
+    """Per-sender self weights (stale-mass discounting, ROADMAP async
+    follow-up (a)): columns still sum to 1 and each sender's diagonal
+    carries exactly its own kept share."""
+    m = 12
+    P = topology.directed_random(jax.random.PRNGKey(0), m, 4)
+    sw = jnp.linspace(0.5, 0.9, m)
+    D = np.asarray(topology.to_push_sparse(P, self_weight=sw).dense())
+    np.testing.assert_allclose(D.sum(0), 1.0, atol=1e-5)
+    np.testing.assert_allclose(D.diagonal(), np.asarray(sw), atol=1e-5)
+    with pytest.raises(ValueError, match="self_weight"):
+        topology.to_push_sparse(P, self_weight=1.0)
+    with pytest.raises(ValueError, match="self_weight"):
+        topology.to_push_sparse(P, self_weight=jnp.full((m,), -0.1))
+
+
+def test_staleness_self_weight_mapping():
+    sw = np.asarray(topology.staleness_self_weight(
+        jnp.asarray([0, 1, 3], jnp.int32), base=0.5))
+    np.testing.assert_allclose(sw, [0.5, 0.75, 0.875])
+
+
+def test_staleness_discount_lifts_plateau():
+    """ACCEPTANCE (satellite): under heavy delay, the push-sum weights of
+    a plain 1/2-self-share population plateau — a large fraction of the
+    total mass lives permanently in flight.  Staleness-discounted senders
+    keep more at home, so the resident (drained) weight is strictly
+    higher at steady state."""
+    m, delay = 8, 3
+
+    def steady_resident_mass(self_weight):
+        P = topology.to_push_sparse(topology.ring(m),
+                                    self_weight=self_weight)
+        mu = jnp.ones((m,))
+        mail = mbox.create(m, 1, depth=delay + 2)
+        flat = jnp.zeros((m, 1))
+        fired = jnp.ones((m,), bool)
+        rows = jnp.arange(m)[:, None]
+        edge_delay = jnp.where(P.idx == rows, 0, delay)
+        resident = []
+        for t in range(40):
+            mail = mbox.flush(mail, t)
+            mail, _, got_mu = mbox.drain(mail, fired)
+            mu = mu + got_mu
+            resident.append(float(mu.sum()))
+            mail = mbox.push(mail, P, flat, mu, fired, edge_delay, t,
+                             n_groups=delay + 1)
+            mu = jnp.zeros((m,))
+            # conservation holds either way — the discount changes WHERE
+            # the mass sits, never how much exists
+            np.testing.assert_allclose(
+                float(mbox.mass(mail) + mu.sum()), m, rtol=1e-5)
+        return np.mean(resident[-10:])
+
+    plain = steady_resident_mass(0.5)
+    discounted = steady_resident_mass(topology.staleness_self_weight(
+        jnp.full((m,), delay, jnp.int32)))
+    # plain 1/2 share: most mass is in flight at any tick; the discount
+    # keeps the slow-link population's resident weight well above it
+    assert discounted > plain * 1.5, (plain, discounted)
+
+
+def test_run_experiment_async_stale_discount():
+    h = run_experiment("dfedpgp", dataclasses.replace(
+        ASYNC_SIM, stale_discount=True), eval_every=1)
+    assert np.isfinite(h["final_acc"]) and 0.0 <= h["final_acc"] <= 1.0
+
+
 def test_to_push_sparse_is_lazy_column_stochastic():
     """The async regime's mixing form: every column sums to 1 (mass
     conservation) and every sender keeps at least half its mass (delayed
