@@ -74,13 +74,24 @@ class DFedPGP:
     k_v: int = 1                   # personal local steps per round
     k_u: int = 5                   # shared local steps per round
     lr_decay: float = 0.99
-    # optional gossip override (params, mu, round) -> (params, mu); used by
-    # the datacenter runtime's ppermute one-peer exponential mix (§Perf)
+    # optional gossip override (params, mu, round, P) -> (params, mu); the
+    # tree-form datacenter mix (Regime B's legacy ppermute path, §Perf)
     mix_fn: Optional[Callable] = None
+    # optional gossip override on the RESIDENT buffer:
+    # (flat, mu, round, P) -> (flat, mu).  This is how Regime B's
+    # shard_map mixes (steps.make_ppermute_mix_flat, kernel_mix's flat
+    # entry) ride round_fn_flat — the override sees the (m, d_flat)
+    # buffer directly, never a tree (docs/gossip.md §Regime B resident)
+    mix_fn_flat: Optional[Callable] = None
     # optional hook applied to the shared-part gradients before the
     # optimizer (e.g. bf16 cast so the FSDP reduction runs at half the wire
     # bytes, or a sharding constraint steering GSPMD to reduce-scatter)
     grad_hook: Optional[Callable] = None
+    # the resident-path twin: applied to the one (d_flat,) gradient row.
+    # Tree hooks expect per-leaf pytrees and would silently misapply to
+    # the row, so the flat round only accepts this form (round_fn_flat
+    # still raises when only the tree hook is set).
+    grad_hook_flat: Optional[Callable] = None
     # gossip payload dtype ("bfloat16" halves the wire bytes of the
     # push-pull transmission — the quantized push-sum of Taheri et al.
     # [ICML'20], which the paper cites for communication efficiency).
@@ -253,7 +264,23 @@ class DFedPGP:
             ref=init_ref(self.codec, fcs.flat),
         ), layout
 
+    def _apply_flat_grad_hook(self, g):
+        """The (d_flat,) gradient-row hook of the resident path.  Falls back
+        to the tree hook for callers driving local_update_flat directly
+        with a row-shaped hook (round_fn_flat itself refuses that case —
+        see its guard)."""
+        if self.grad_hook_flat is not None:
+            return self.grad_hook_flat(g)
+        if self.grad_hook is not None:
+            return self.grad_hook(g)
+        return g
+
     def _check_codec(self) -> None:
+        if self.codec is not None and self.mix_fn_flat is not None:
+            raise ValueError("codec and mix_fn_flat are mutually "
+                             "exclusive: the codec path owns the wire "
+                             "crossing (gossip.mix_flat) — a mix override "
+                             "would bypass the error-feedback ledger")
         g = float(self.codec_gamma)
         if self.codec is None or self.codec.exact:
             # same loud-knob rule as block_m: a consensus step only
@@ -317,8 +344,7 @@ class DFedPGP:
             # same as the tree path's value_and_grad(loss_fn)(z_k))
             z_row = (row / mu_i).astype(row.dtype)
             loss, g = jax.value_and_grad(flat_loss)(z_row, batch)
-            if self.grad_hook is not None:
-                g = self.grad_hook(g)
+            g = self._apply_flat_grad_hook(g)
             row2, s2 = self.opt_u.update(g, s, row, lr_scale)
             if step_gate_u is not None:
                 gate = step_gate_u[k]
@@ -369,8 +395,7 @@ class DFedPGP:
 
         flat_loss = local.flat_view_loss(self.loss_fn, layout, personal)
         loss_u, g_u = jax.value_and_grad(flat_loss)(z_row, batch)
-        if self.grad_hook is not None:
-            g_u = self.grad_hook(g_u)
+        g_u = self._apply_flat_grad_hook(g_u)
         row2, su2 = self.opt_u.update(g_u, opt_u, flat_row, lr_scale)
 
         if not has_v_phase:
@@ -389,21 +414,27 @@ class DFedPGP:
     def round_fn_flat(self, state: FlatDFedPGPState, P, batches,
                       layout: gossip.FlatLayout, step_gate_u=None):
         """Resident-buffer round: local steps on unraveled views, then the
-        push-pull mixes the buffer in place (gossip.mix_flat) — no
-        per-round pack.  mix_fn overrides operate on tree-form leaves
-        (Regime B sharding); use round_fn for those."""
-        if self.mix_fn is not None:
-            raise ValueError("mix_fn overrides need the tree-form "
-                             "round_fn; the resident path mixes the flat "
-                             "buffer directly")
-        if self.grad_hook is not None:
+        push-pull mixes the buffer in place (gossip.mix_flat, or a
+        mix_fn_flat override operating directly on the (m, d_flat) buffer
+        — Regime B's shard_map ppermute / fused-kernel mixes).  Tree-form
+        mix_fn overrides need round_fn."""
+        if self.mix_fn is not None and self.mix_fn_flat is None:
+            raise ValueError("mix_fn overrides operate on tree-form "
+                             "leaves; the resident path mixes the flat "
+                             "buffer directly — provide mix_fn_flat "
+                             "(steps.make_ppermute_mix_flat, "
+                             "kernel_mix.make_kernel_mix_flat) or use the "
+                             "tree-form round_fn")
+        if self.grad_hook is not None and self.grad_hook_flat is None:
             # tree-path hooks see per-leaf gradients (e.g. sharding
             # constraints with a leaf-spec pytree); here the gradient is
             # one (d_flat,) row — refuse rather than silently hand a hook
             # the wrong structure.  (local_update_flat does apply the hook
             # to the flat row for callers driving it directly.)
             raise ValueError("grad_hook expects tree-form shared-part "
-                             "gradients; use the tree-form round_fn")
+                             "gradients; provide grad_hook_flat (the "
+                             "(d_flat,) row form) or use the tree-form "
+                             "round_fn")
         lr_scale = self.lr_decay ** state.round.astype(jnp.float32)
         if step_gate_u is None:
             shp = jax.tree.leaves(batches["u"])[0].shape[:2]   # (m, K_u)
@@ -418,7 +449,12 @@ class DFedPGP:
             state.flat, state.personal, state.mu, state.opt_u, state.opt_v,
             batches["v"], batches["u"], step_gate_u)
 
-        if self.codec is not None:
+        if self.mix_fn_flat is not None:
+            # resident mix override (Regime B): the shard_map ppermute /
+            # fused-kernel mixes consume the buffer as-is
+            flat, mu = self.mix_fn_flat(flat, state.mu, state.round, P)
+            ef, ref = state.ef, state.ref
+        elif self.codec is not None:
             # one wire crossing per round: the codec key folds the round
             # index in, so randomized codecs (randk, qsgd) redraw per
             # round deterministically in (codec.seed, round)

@@ -1,9 +1,14 @@
 """Gossip mixing through the Pallas push-sum kernel.
 
-Flattens every shared leaf of the stacked client params into one
-(m, d_flat) matrix and performs the whole round's push-pull as a single
-tiled MXU matmul (kernels/pushsum_mix) instead of one einsum per leaf —
-the FL simulator's hot-loop fast path.
+Performs the whole round's push-pull as a single tiled MXU matmul
+(kernels/pushsum_mix) instead of one einsum per leaf.  Two entry points:
+
+- `make_kernel_mix_flat` — the resident form (docs/gossip.md §Regime B
+  resident lifecycle): mixes the (m, d_flat) buffer directly, for
+  `DFedPGP(mix_fn_flat=...)` / `round_fn_flat`.  No flatten, no unflatten.
+- `make_kernel_mix` — the legacy tree form for `DFedPGP(mix_fn=...)`:
+  flattens every shared leaf of the stacked client params into the
+  (m, d_flat) matrix per round, mixes through the flat entry, slices back.
 """
 from __future__ import annotations
 
@@ -15,23 +20,36 @@ from . import partition
 from .topology import SparseTopology
 
 
-def make_kernel_mix(mask, force: str = "auto"):
-    """-> mix_fn(params, mu, rnd, P) for DFedPGP(mix_fn=...).
+def make_kernel_mix_flat(force: str = "auto"):
+    """-> mix_fn(flat, mu, rnd, P) for DFedPGP(mix_fn_flat=...).
 
     This is the DENSE (m, m) MXU path; it densifies a SparseTopology P.
     For the O(m*k*d) neighbor-indexed path use gossip="sparse"/"pallas"
     on DFedPGP directly (docs/gossip.md)."""
 
-    def mix(params, mu, rnd, P):
+    def mix(flat, mu, rnd, P):
         del rnd
         if isinstance(P, SparseTopology):
             P = P.dense()
+        mixed = ops.pushsum_mix(P, flat.astype(jnp.float32), force=force)
+        return mixed.astype(flat.dtype), jnp.einsum("mn,n->m", P, mu)
+
+    return mix
+
+
+def make_kernel_mix(mask, force: str = "auto"):
+    """-> mix_fn(params, mu, rnd, P) for DFedPGP(mix_fn=...) — the
+    tree-form wrapper around `make_kernel_mix_flat` (per-round flatten /
+    unflatten; the resident path skips both)."""
+    mix_flat = make_kernel_mix_flat(force)
+
+    def mix(params, mu, rnd, P):
         u, v = partition.split(params, mask)
         leaves, treedef = jax.tree.flatten(u)
         m = leaves[0].shape[0]
         flat = jnp.concatenate(
             [x.reshape(m, -1).astype(jnp.float32) for x in leaves], axis=1)
-        mixed = ops.pushsum_mix(P, flat, force=force)
+        mixed, mu2 = mix_flat(flat, mu, rnd, P)
         out, off = [], 0
         for leaf in leaves:
             n = leaf[0].size
@@ -39,7 +57,6 @@ def make_kernel_mix(mask, force: str = "auto"):
                        .astype(leaf.dtype))
             off += n
         u2 = jax.tree.unflatten(treedef, out)
-        mu2 = jnp.einsum("mn,n->m", P, mu)
         return partition.merge(u2, v), mu2
 
     return mix

@@ -85,10 +85,10 @@ class AsyncRuntime:
               depth: int = 4):
         """-> (runtime, state).  Packs the shared part once (resident
         buffer) and validates the profile against the client count."""
-        if algo.mix_fn is not None:
-            raise ValueError("mix_fn overrides are a sync tree-form "
-                             "feature; the async runtime mixes through "
-                             "the mailbox")
+        if algo.mix_fn is not None or algo.mix_fn_flat is not None:
+            raise ValueError("mix_fn/mix_fn_flat overrides are sync "
+                             "round-level features; the async runtime "
+                             "mixes through the mailbox")
         fstate, layout = algo.init_flat(stacked_params)
         m = fstate.mu.shape[0]
         validate_profile(profile, m)

@@ -88,9 +88,12 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, gossip: str = "matrix",
             keep_hlo: bool = False, unroll: bool = False,
             bf16_grads: bool = False, kv_quant: bool = False,
             bf16_params: bool = False, moe_shard: str = "",
-            gossip_dtype: str = "", tag: str = "") -> dict:
+            gossip_dtype: str = "", resident: bool = False,
+            topology_kind: str = "", n_neighbors: int = 10,
+            tag: str = "") -> dict:
     import jax
     from repro.configs import SHAPES, get_config, shape_applicable
+    from repro.core import topology
     from repro.launch import steps
     from repro.launch.mesh import make_production_mesh
 
@@ -114,8 +117,16 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, gossip: str = "matrix",
         cfg = cfg.replace(moe_dispatch_axes=tuple(moe_shard.split(",")))
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     layout = steps.decide_layout(mesh, arch, shape)
+    schedule = None
+    if topology_kind:
+        # the run's ONE TopologySchedule, threaded through build_step into
+        # the mix (docs/gossip.md §One topology object)
+        n = n_neighbors if topology_kind == "random" else 0
+        schedule = topology.TopologySchedule(topology_kind,
+                                             layout.n_clients, n)
     kw = dict(k_u=k_u, k_v=k_v, gossip=gossip, bf16_grads=bf16_grads,
-              gossip_dtype=gossip_dtype) if shape.kind == "train" else {}
+              gossip_dtype=gossip_dtype, schedule=schedule,
+              resident=resident) if shape.kind == "train" else {}
 
     t0 = time.time()
     fn, ins, outs, args, donate = steps.build_step(cfg, mesh, layout, shape,
@@ -131,6 +142,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, gossip: str = "matrix",
     rec = {
         "arch": arch, "shape": shape_name, "mesh": mesh_kind,
         "gossip": gossip, "status": "ok", "unroll": bool(unroll),
+        "resident": bool(resident), "topology": topology_kind,
         "bf16_grads": bool(bf16_grads), "kv_quant": bool(kv_quant),
         "layout": {"client_axes": layout.client_axes,
                    "batch_axes": layout.batch_axes,
@@ -213,6 +225,15 @@ def main(argv=None):
                     help="expert,token mesh axes for the dispatch buffer")
     ap.add_argument("--gossip-dtype", default="",
                     help="bfloat16 = quantized push-sum payload")
+    ap.add_argument("--resident", action="store_true",
+                    help="resident flat-buffer train step "
+                         "(FlatDFedPGPState carry)")
+    ap.add_argument("--topology", default="", dest="topology_kind",
+                    choices=["", "random", "exponential", "ring", "full"],
+                    help="thread a TopologySchedule of this kind through "
+                         "the step builder (default: legacy dense P arg)")
+    ap.add_argument("--neighbors", type=int, default=10,
+                    help="in-degree for --topology random (paper: 10)")
     ap.add_argument("--kv-quant", action="store_true")
     ap.add_argument("--tag", default="", help="artifact filename suffix")
     ap.add_argument("--all", action="store_true",
@@ -232,7 +253,10 @@ def main(argv=None):
                           bf16_grads=args.bf16_grads, kv_quant=args.kv_quant,
                           bf16_params=args.bf16_params,
                           moe_shard=args.moe_shard,
-                          gossip_dtype=args.gossip_dtype, tag=args.tag)
+                          gossip_dtype=args.gossip_dtype,
+                          resident=args.resident,
+                          topology_kind=args.topology_kind,
+                          n_neighbors=args.neighbors, tag=args.tag)
             status = rec["status"]
             extra = ""
             if status == "ok":

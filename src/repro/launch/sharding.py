@@ -186,6 +186,29 @@ def params_sharding(params_tree, mesh: Mesh, tp_axes: Sequence[str],
     return jax.tree_util.tree_unflatten(treedef, out)
 
 
+def flat_buffer_spec(mesh: Mesh, client_axes: Sequence[str], d_flat: int,
+                     tp_axes: Sequence[str] = ()) -> P:
+    """PartitionSpec of the resident (m, d_flat) shared buffer and every
+    array that shares its layout (the (m, d_flat) momentum, ef/ref codec
+    memory): rows over the client axes, the flat dim over the TP axes when
+    it divides evenly (docs/gossip.md §Regime B resident lifecycle).
+
+    The d_flat axis concatenates whole leaves in treedef order, so a TP
+    shard cuts *through* leaves rather than along their natural TP dims —
+    that is fine for the mix (a pure row operation) and for local SGD (the
+    row is unraveled to leaf views per client, and GSPMD re-shards the
+    views at the loss boundary); a non-divisible d_flat simply replicates
+    the flat dim instead of padding."""
+    ca = None
+    if client_axes:
+        ca = tuple(client_axes) if len(client_axes) > 1 else client_axes[0]
+    tp_size = _tp_size(mesh, tp_axes) if tp_axes else 1
+    fa = None
+    if tp_axes and tp_size > 1 and d_flat > 0 and d_flat % tp_size == 0:
+        fa = tuple(tp_axes) if len(tp_axes) > 1 else tp_axes[0]
+    return P(ca, fa)
+
+
 def batch_sharding(batch_tree, mesh: Mesh, batch_axes: Sequence[str]):
     """Shard the leading (client or batch) dim of every leaf."""
     ba = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]

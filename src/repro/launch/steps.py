@@ -30,9 +30,10 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.configs import InputShape
 from repro.core import dfedpgp, partition, topology
+from repro.core.gossip import FlatLayout
 from repro.models import get_model, prefill_logits
 from repro.models.config import ModelConfig
-from repro.optim import SGD
+from repro.optim import SGD, SGDState
 from . import sharding
 
 try:                                     # jax >= 0.5 exports it at top level
@@ -200,6 +201,33 @@ def state_shardings(state_struct, mesh: Mesh, layout: Layout):
     )
 
 
+def flat_state_shardings(state_struct, mesh: Mesh, layout: Layout):
+    """Shardings for a FlatDFedPGPState (the resident Regime B round,
+    docs/gossip.md §Regime B resident lifecycle).
+
+    The u-view of the params is gone: the (m, d_flat) buffer IS the shared
+    part, sharded rows-over-client-axes / flat-dim-over-TP
+    (sharding.flat_buffer_spec), and the (m, d_flat) shared momentum and
+    the codec ef/ref memory share its layout exactly.  Personal leaves
+    (and their momentum tree) keep the per-leaf param rules; mu rides the
+    client axes; round is replicated."""
+    ca = _axes_or_none(layout.client_axes)
+    d_flat = state_struct.flat.shape[1]
+    buf = NamedSharding(mesh, sharding.flat_buffer_spec(
+        mesh, layout.client_axes, d_flat, layout.tp_axes))
+    personal = params_shardings(state_struct.personal, mesh, layout)
+    return dfedpgp.FlatDFedPGPState(
+        flat=buf,
+        personal=personal,
+        mu=NamedSharding(mesh, P(ca) if ca is not None else P()),
+        opt_u=SGDState(buf),
+        opt_v=SGDState(personal),
+        round=NamedSharding(mesh, P()),
+        ef=jax.tree.map(lambda _: buf, state_struct.ef),
+        ref=jax.tree.map(lambda _: buf, state_struct.ref),
+    )
+
+
 def cache_shardings(cache_struct, mesh: Mesh, layout: Layout):
     """KV caches / recurrent state: (client, [layer-stack,] batch, ...)."""
     ca = _axes_or_none(layout.client_axes)
@@ -232,6 +260,25 @@ def cache_shardings(cache_struct, mesh: Mesh, layout: Layout):
 # ---------------------------------------------------------------------------
 # gossip variants
 # ---------------------------------------------------------------------------
+def _ppermute_pull(a, rnd_s, axis, m: int, offsets):
+    """Inside shard_map: pull `a`'s client-axis shard from the peer at the
+    round's schedule offset (offsets[rnd_s mod period])."""
+    def branch(off):
+        perm = [(i, (i + off) % m) for i in range(m)]
+        return jax.lax.ppermute(a, axis, perm)
+
+    return jax.lax.switch(jnp.mod(rnd_s, len(offsets)),
+                          [(lambda o=off: branch(o)) for off in offsets])
+
+
+def _schedule_offsets(schedule, m: int):
+    """Resolve the mix's schedule (default: one-peer exponential) and its
+    validated per-round permutation offsets."""
+    schedule = schedule or topology.TopologySchedule.exponential(m)
+    assert schedule.m == m, (schedule.m, m)
+    return schedule, schedule.permutation_offsets()
+
+
 def make_ppermute_mix(mesh: Mesh, layout: Layout, mask, params_struct,
                       wire_dtype=None,
                       schedule: "topology.TopologySchedule | None" = None):
@@ -254,10 +301,7 @@ def make_ppermute_mix(mesh: Mesh, layout: Layout, mask, params_struct,
     ca = layout.client_axes
     axis = ca if len(ca) > 1 else ca[0]
     m = layout.n_clients
-    schedule = schedule or topology.TopologySchedule.exponential(m)
-    assert schedule.m == m, (schedule.m, m)
-    offsets = schedule.permutation_offsets()   # validates the (1/2, 1/2) mix
-    period = len(offsets)
+    schedule, offsets = _schedule_offsets(schedule, m)
 
     ps = params_shardings(params_struct, mesh, layout)
     u_specs = jax.tree.map(lambda s, msk: s.spec if msk else None,
@@ -267,24 +311,18 @@ def make_ppermute_mix(mesh: Mesh, layout: Layout, mask, params_struct,
         u, v = partition.split(params, mask)
 
         def body(rnd_s, u_shard, mu_shard):
-            def permute(a):
-                def branch(off):
-                    perm = [(i, (i + off) % m) for i in range(m)]
-                    return jax.lax.ppermute(a, axis, perm)
-
-                return jax.lax.switch(
-                    jnp.mod(rnd_s, period),
-                    [(lambda o=off: branch(o)) for off in offsets])
-
             def mix_leaf(a):
                 # quantized push-sum payload: ONLY the permuted copy is
                 # narrowed (the wire), the resident copy stays full —
                 # wire bytes halve, locally-held precision is unchanged.
-                recv = permute(a.astype(wire_dtype) if wire_dtype else a)
+                recv = _ppermute_pull(
+                    a.astype(wire_dtype) if wire_dtype else a,
+                    rnd_s, axis, m, offsets)
                 return (a + recv.astype(a.dtype)) * 0.5
 
             u2 = jax.tree.map(mix_leaf, u_shard)
-            mu2 = (mu_shard + permute(mu_shard)) * 0.5
+            mu2 = (mu_shard + _ppermute_pull(mu_shard, rnd_s, axis, m,
+                                             offsets)) * 0.5
             return u2, mu2
 
         u2, mu2 = _shard_map(
@@ -296,19 +334,61 @@ def make_ppermute_mix(mesh: Mesh, layout: Layout, mask, params_struct,
     return mix
 
 
+def make_ppermute_mix_flat(mesh: Mesh, layout: Layout, d_flat: int,
+                           wire_dtype=None,
+                           schedule: "topology.TopologySchedule | None"
+                           = None):
+    """The resident form of `make_ppermute_mix` (tentpole of docs/gossip.md
+    §Regime B resident lifecycle): ONE ppermute of each rank's
+    (m_local, d_flat) buffer block plus the mu row, instead of a per-leaf
+    tree_map of permutes — for `DFedPGP(mix_fn_flat=...)` /
+    `round_fn_flat`.  The permutation offsets come from the SAME
+    `TopologySchedule` object Regime A mixes with, so the two regimes
+    provably agree (tests/test_regime_parity.py).
+
+    Returns mix_fn(flat, mu, rnd, P_unused) -> (flat, mu)."""
+    ca = layout.client_axes
+    axis = ca if len(ca) > 1 else ca[0]
+    m = layout.n_clients
+    schedule, offsets = _schedule_offsets(schedule, m)
+    buf_spec = sharding.flat_buffer_spec(mesh, ca, d_flat, layout.tp_axes)
+
+    def mix(flat, mu, rnd, P_unused=None):
+        def body(rnd_s, flat_blk, mu_blk):
+            recv = _ppermute_pull(
+                flat_blk.astype(wire_dtype) if wire_dtype else flat_blk,
+                rnd_s, axis, m, offsets)
+            flat2 = (flat_blk + recv.astype(flat_blk.dtype)) * 0.5
+            mu2 = (mu_blk + _ppermute_pull(mu_blk, rnd_s, axis, m,
+                                           offsets)) * 0.5
+            return flat2, mu2
+
+        return _shard_map(
+            body, mesh=mesh,
+            in_specs=(P(), buf_spec, P(axis)),
+            out_specs=(buf_spec, P(axis)))(rnd, flat, mu)
+
+    return mix
+
+
 # ---------------------------------------------------------------------------
 # step builders
 # ---------------------------------------------------------------------------
-def build_train_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
-                     shape: InputShape, k_u: int = 1, k_v: int = 1,
-                     gossip: str = "matrix", bf16_grads: bool = False,
-                     gossip_dtype: str = ""):
-    """-> (train_step, in_shardings, out_shardings, arg_structs).
+def build_train_algo(cfg: ModelConfig, mesh: "Mesh | None", layout: Layout,
+                     k_u: int = 1, k_v: int = 1, gossip: str = "matrix",
+                     bf16_grads: bool = False, gossip_dtype: str = "",
+                     schedule: "topology.TopologySchedule | None" = None,
+                     resident: bool = False, lr: float = 0.1):
+    """-> (algo, mask, params_struct, flat_layout).
 
-    train_step(state, P, batches) -> (state, metrics): one DFedPGP round —
-    K_v personal steps, K_u shared steps at the de-biased parameters, then
-    the directed push-sum mixing of the shared part.
-    """
+    The DFedPGP instance behind a Regime B train round, shared by
+    `build_train_step` (which jits it against ShapeDtypeStructs) and
+    `launch/train.py` (which initializes REAL state from it) — so every
+    driver threads the SAME `TopologySchedule` object into the mix, the
+    one-topology invariant of docs/gossip.md.  `schedule` must match the
+    layout's client count; `resident=True` builds the flat-buffer form
+    (mix_fn_flat / grad_hook_flat; flat_layout is the buffer's static
+    wire layout, None otherwise)."""
     api = get_model(cfg)
 
     def loss_fn(p, batch):
@@ -318,38 +398,112 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
     template = jax.tree.map(
         lambda x: jax.ShapeDtypeStruct(x.shape[1:], x.dtype), params_struct)
     mask = partition.build_mask(template, partition.classifier_personal)
-    opt = SGD(lr=0.1, momentum=0.9, weight_decay=5e-4)
-    mix_fn = None
+    if schedule is not None:
+        # a configured topology that does not match the mesh's client
+        # count would silently mix a DIFFERENT graph than the experiment
+        # requested (the pre-PR-5 build_train_step ignored `schedule`
+        # entirely and always fell back to the default exponential graph)
+        assert schedule.m == layout.n_clients, \
+            (f"schedule.m={schedule.m} != layout.n_clients="
+             f"{layout.n_clients}")
+    flat_layout = FlatLayout.build(params_struct, mask) if resident else None
+    opt = SGD(lr=lr, momentum=0.9, weight_decay=5e-4)
+    mix_fn = mix_fn_flat = None
     if gossip == "ppermute":
         wd = jnp.dtype(gossip_dtype) if gossip_dtype else None
-        mix_fn = make_ppermute_mix(mesh, layout, mask, params_struct,
-                                   wire_dtype=wd)
-    grad_hook = None
+        if resident:
+            mix_fn_flat = make_ppermute_mix_flat(
+                mesh, layout, flat_layout.d_flat, wire_dtype=wd,
+                schedule=schedule)
+        else:
+            mix_fn = make_ppermute_mix(mesh, layout, mask, params_struct,
+                                       wire_dtype=wd, schedule=schedule)
+    grad_hook = grad_hook_flat = None
     if bf16_grads:
-        # §Perf H2: cast shared-part grads to bf16 before the optimizer so
+        # §Perf H2: cast SHARED-part grads to bf16 before the optimizer so
         # the cross-data-shard gradient reduction moves half the bytes.
+        # Scoped to the shared mask: the personal (classifier) part never
+        # crosses a data shard, so narrowing it would cost precision for
+        # zero wire savings.  On the resident path the whole (d_flat,) row
+        # IS the shared part, so the flat hook casts it outright.
         grad_hook = lambda g: jax.tree.map(
-            lambda x: x.astype(jnp.bfloat16) if x.ndim else x, g)
+            lambda x, mk: x.astype(jnp.bfloat16) if (mk and x.ndim) else x,
+            g, mask)
+        grad_hook_flat = lambda g: g.astype(jnp.bfloat16)
     algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
                            k_v=k_v, k_u=k_u, mix_fn=mix_fn,
+                           mix_fn_flat=mix_fn_flat,
                            grad_hook=grad_hook,
+                           grad_hook_flat=grad_hook_flat,
                            gossip_dtype=gossip_dtype or None)
+    return algo, mask, params_struct, flat_layout
 
-    state_struct = jax.eval_shape(algo.init, params_struct)
+
+def _topology_specs(mesh: Mesh, layout: Layout, schedule, dense_struct):
+    """(P_struct, P_sharding) for the round's mixing-pattern argument: a
+    schedule-driven round passes the schedule's own SparseTopology
+    (neighbor tables row-sharded over the client axes); schedule-less
+    rounds keep the legacy replicated dense (m, m) matrix."""
+    if schedule is None:
+        return dense_struct, NamedSharding(mesh, P())
+    topo0 = schedule.at(0)
+    struct = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), topo0)
+    ca = _axes_or_none(layout.client_axes)
+    sh = jax.tree.map(
+        lambda _: NamedSharding(mesh, P(ca, None)), struct)
+    return struct, sh
+
+
+def build_train_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
+                     shape: InputShape, k_u: int = 1, k_v: int = 1,
+                     gossip: str = "matrix", bf16_grads: bool = False,
+                     gossip_dtype: str = "",
+                     schedule: "topology.TopologySchedule | None" = None,
+                     resident: bool = False):
+    """-> (train_step, in_shardings, out_shardings, arg_structs).
+
+    train_step(state, P, batches) -> (state, metrics): one DFedPGP round —
+    K_v personal steps, K_u shared steps at the de-biased parameters, then
+    the directed push-sum mixing of the shared part.
+
+    resident=True is the flat-buffer form (docs/gossip.md §Regime B
+    resident lifecycle): the state is a FlatDFedPGPState whose (m, d_flat)
+    buffer — not the params tree — is the donated jit carry, local SGD
+    runs on unraveled row views, and the mix operates on the buffer
+    directly (ppermute block mix / gossip.mix_flat).  `schedule` threads
+    the experiment's TopologySchedule into the mix AND switches the P
+    argument to the schedule's own SparseTopology form, so one object
+    decides who talks to whom in both regimes."""
+    algo, mask, params_struct, flat_layout = build_train_algo(
+        cfg, mesh, layout, k_u=k_u, k_v=k_v, gossip=gossip,
+        bf16_grads=bf16_grads, gossip_dtype=gossip_dtype,
+        schedule=schedule, resident=resident)
+
     specs = input_specs(cfg, shape, layout, k_u=k_u, k_v=k_v)
-
-    st_sh = state_shardings(state_struct, mesh, layout)
     b_sh = batch_specs(specs["batches"], mesh, layout, n_lead=2)
     metrics_sh = {k: NamedSharding(mesh, P())
                   for k in ("loss_v", "loss_u", "mu_min", "mu_max")}
+    P_struct, P_sh = _topology_specs(mesh, layout, schedule, specs["P"])
 
-    def train_step(state, Pm, batches):
-        return algo.round_fn(state, Pm, batches)
+    if resident:
+        state_struct = jax.eval_shape(
+            lambda p: algo.init_flat(p, flat_layout)[0], params_struct)
+        st_sh = flat_state_shardings(state_struct, mesh, layout)
+
+        def train_step(state, Pm, batches):
+            return algo.round_fn_flat(state, Pm, batches, flat_layout)
+    else:
+        state_struct = jax.eval_shape(algo.init, params_struct)
+        st_sh = state_shardings(state_struct, mesh, layout)
+
+        def train_step(state, Pm, batches):
+            return algo.round_fn(state, Pm, batches)
 
     return (train_step,
-            (st_sh, NamedSharding(mesh, P()), b_sh),
+            (st_sh, P_sh, b_sh),
             (st_sh, metrics_sh),
-            (state_struct, specs["P"], specs["batches"]))
+            (state_struct, P_struct, specs["batches"]))
 
 
 def build_prefill_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,

@@ -5,25 +5,33 @@ available (CPU host devices here; the same code lowers to the production
 meshes via dryrun.py).  Each data rank is a personalized client; the shared
 body gossips over a time-varying directed graph; the lm_head stays local.
 
+ONE `topology.TopologySchedule` (--topology/--seed) decides who talks to
+whom: the matrix gossip pulls `schedule.at(r)` each round and the ppermute
+mix derives its shard_map offsets from the same object — the invariant
+both regimes share (docs/gossip.md §One topology object).  --resident
+trains on the (m, d_flat) flat buffer (`FlatDFedPGPState`, donated jit
+carry) instead of the tree-form state.
+
 Usage (small smoke config, a few rounds, synthetic LM data):
   PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
       --rounds 4 --clients 4 --batch 2 --seq 128 --reduced \
-      [--gossip matrix|ppermute]
+      [--gossip matrix|ppermute] [--topology random|exponential|ring|full] \
+      [--resident]
 """
 from __future__ import annotations
 
 import argparse
+import functools
 import time
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config, get_reduced
-from repro.core import dfedpgp, partition, topology
+from repro.core import partition, topology
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
-from repro.optim import SGD
 
 
 def synth_lm_batch(key, cfg, lead, seq):
@@ -41,6 +49,18 @@ def synth_lm_batch(key, cfg, lead, seq):
     return batch
 
 
+def make_cli_schedule(kind: str, m: int, n_neighbors: int,
+                      seed: int, gossip: str) -> topology.TopologySchedule:
+    """The run's ONE mixing schedule.  Default: the one-peer exponential
+    graph for ppermute (the only kind that IS a permutation mix), the
+    paper's n-random-in-neighbors graph for the matrix contraction."""
+    if not kind:
+        kind = "exponential" if gossip == "ppermute" else "random"
+    if kind in ("random", "undirected"):
+        return topology.TopologySchedule(kind, m, n_neighbors, seed)
+    return topology.TopologySchedule(kind, m, 0, seed)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -53,6 +73,16 @@ def main(argv=None):
     ap.add_argument("--neighbors", type=int, default=2)
     ap.add_argument("--gossip", default="matrix",
                     choices=["matrix", "ppermute"])
+    ap.add_argument("--topology", default="",
+                    choices=["", "random", "exponential", "ring", "full"],
+                    help="mixing schedule kind (default: exponential for "
+                         "ppermute, random otherwise)")
+    ap.add_argument("--seed", type=int, default=0,
+                    help="schedule seed (random kinds)")
+    ap.add_argument("--resident", action="store_true",
+                    help="train on the resident (m, d_flat) flat buffer "
+                         "(FlatDFedPGPState; docs/gossip.md §Regime B "
+                         "resident lifecycle)")
     ap.add_argument("--reduced", action="store_true",
                     help="use the reduced (smoke) variant of the arch")
     ap.add_argument("--tp", type=int, default=1)
@@ -68,47 +98,58 @@ def main(argv=None):
     else:
         mesh = make_host_mesh(m, args.tp)
 
-    api = get_model(cfg)
+    gossip = args.gossip
+    if gossip == "ppermute" and mesh is None:
+        print("[train] note: ppermute needs the client mesh; "
+              "falling back to matrix gossip")
+        gossip = "matrix"
+    schedule = make_cli_schedule(args.topology, m, args.neighbors,
+                                 args.seed, gossip)
 
-    def loss_fn(p, batch):
-        return api.loss_fn(p, batch, cfg)
+    api = get_model(cfg)
+    layout = steps.Layout(("data",), (), ("model",), (), m, args.batch)
+    algo, mask, _, flat_layout = steps.build_train_algo(
+        cfg, mesh, layout, k_u=args.k_u, k_v=args.k_v, gossip=gossip,
+        schedule=schedule, resident=args.resident, lr=0.02)
 
     key = jax.random.PRNGKey(0)
     stacked = jax.vmap(lambda k: api.init_params(k, cfg))(
         jax.random.split(key, m))
     template = jax.tree.map(lambda x: x[0], stacked)
-    mask = partition.build_mask(template, partition.classifier_personal)
 
-    opt = SGD(lr=0.02, momentum=0.9, weight_decay=5e-4)
-    mix_fn = None
-    if args.gossip == "ppermute" and mesh is not None:
-        layout = steps.Layout(("data",), (), ("model",), (), m, args.batch)
-        mix_fn = steps.make_ppermute_mix(mesh, layout, mask, stacked)
-    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
-                           k_v=args.k_v, k_u=args.k_u, mix_fn=mix_fn)
-    state = algo.init(stacked)
+    if args.resident:
+        state, flat_layout = algo.init_flat(stacked, flat_layout)
 
-    @jax.jit
-    def round_fn(state, P, batches):
-        return algo.round_fn(state, P, batches)
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def round_fn(state, P, batches):
+            # the FLAT BUFFER is the donated carry — the round updates the
+            # (m, d_flat) buffer in place, no tree materializes
+            return algo.round_fn_flat(state, P, batches, flat_layout)
+    else:
+        state = algo.init(stacked)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def round_fn(state, P, batches):
+            return algo.round_fn(state, P, batches)
 
     print(f"[train] {cfg.arch_id} family={cfg.family} clients={m} "
           f"params/client={partition.count_params(template):,} "
-          f"shared={partition.count_params(template, mask, True):,}")
+          f"shared={partition.count_params(template, mask, True):,} "
+          f"topology={schedule.kind} resident={args.resident}")
 
     import contextlib
     ctx = mesh if mesh is not None else contextlib.nullcontext()
     with ctx:
         for r in range(args.rounds):
             kr = jax.random.fold_in(key, r + 1)
-            kb, kp = jax.random.split(kr)
+            kb, _ = jax.random.split(kr)
             batches = {
                 "v": synth_lm_batch(kb, cfg, (m, args.k_v, args.batch),
                                     args.seq),
                 "u": synth_lm_batch(jax.random.fold_in(kb, 7), cfg,
                                     (m, args.k_u, args.batch), args.seq),
             }
-            P = topology.directed_random(kp, m, args.neighbors)
+            P = schedule.at(r)
             t0 = time.time()
             state, metrics = round_fn(state, P, batches)
             lu = float(metrics["loss_u"])

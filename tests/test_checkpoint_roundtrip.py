@@ -78,6 +78,44 @@ def test_flat_state_checkpoint_roundtrip(tmp_path, codec):
     _assert_trees_equal(state, restored)
 
 
+def test_sharded_flat_state_checkpoint_roundtrip(tmp_path):
+    """Regime B resident form: a FlatDFedPGPState laid out by
+    steps.flat_state_shardings (buffer rows over the client mesh axes)
+    saves through the host npz path and restores onto the SAME shardings,
+    then continues bit-for-bit — the checkpoint boundary of the resident
+    datacenter round (docs/gossip.md §Regime B resident lifecycle)."""
+    from repro.launch import steps
+
+    loss_fn, mask, cu, cv = _quad()
+    m = cu.shape[0]
+    algo = _algo(loss_fn, mask)
+    state, layout = algo.init_flat({"body": cu, "head": cv})
+    sched = topology.TopologySchedule.random(m, 3, seed=21)
+    b = _batches(cu, cv, 1, 2)
+    state, _ = algo.round_fn_flat(state, sched.at(0), b, layout)
+
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    lay = steps.Layout(("data",), (), ("model",), (), m, 1)
+    shardings = steps.flat_state_shardings(state, mesh, lay)
+    sharded = jax.device_put(state, shardings)
+    assert sharded.flat.sharding.spec == \
+        steps.sharding.flat_buffer_spec(mesh, lay.client_axes,
+                                        layout.d_flat, lay.tp_axes)
+    # the (m, d_flat) momentum and the buffer share one layout
+    assert sharded.opt_u.momentum.sharding == sharded.flat.sharding
+
+    path = str(tmp_path / "flat_sharded")
+    save_pytree(path, sharded, metadata={"round": 1})
+    template = jax.tree.map(jnp.zeros_like, state)
+    restored = jax.device_put(load_pytree(path, template), shardings)
+    _assert_trees_equal(sharded, restored)
+
+    for r in range(1, 3):
+        state, _ = algo.round_fn_flat(state, sched.at(r), b, layout)
+        restored, _ = algo.round_fn_flat(restored, sched.at(r), b, layout)
+    _assert_trees_equal(state, restored)
+
+
 def test_async_runtime_checkpoint_roundtrip(tmp_path):
     """The async trio — profile + clock + mailbox ring (+ codec memory) —
     round-trips through one npz and resumes bit-for-bit under delays,

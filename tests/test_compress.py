@@ -544,3 +544,22 @@ def test_run_experiment_async_codec(algo):
     ident = run_experiment(algo, dataclasses.replace(
         ASYNC_SIM, codec="identity"), eval_every=1)
     assert 0 < h["wire_bytes"][-1] < ident["wire_bytes"][-1]
+
+
+def test_wire_meter_sync_equals_async():
+    """The two runtimes' wire_bytes meters are apples-to-apples (E7/E8
+    cross-runtime comparisons): under the uniform zero-delay profile the
+    async regime fires exactly once per sync-equivalent window over the
+    same seeded schedule family, so cumulative bytes must agree EXACTLY —
+    uncompressed, identity, and lossy (where BOTH meters count the
+    tracked-reference bootstrap rows on top of the per-edge payloads)."""
+    base = SimConfig(m=6, rounds=4, n_neighbors=2, n_train=16, n_test=8,
+                     batch=8, k_local=2, k_personal=1, hetero="uniform",
+                     push_delay_max=0, availability=1.0)
+    for codec, gamma in ((None, 1.0), ("identity", 1.0), ("topk", 0.5)):
+        sim = dataclasses.replace(base, codec=codec, codec_gamma=gamma)
+        h_sync = run_experiment("dfedpgp", sim, eval_every=2)
+        h_async = run_experiment("dfedpgp", dataclasses.replace(
+            sim, runtime="async"), eval_every=2)
+        assert h_sync["wire_bytes"] == h_async["wire_bytes"], \
+            (codec, h_sync["wire_bytes"], h_async["wire_bytes"])

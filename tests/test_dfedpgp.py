@@ -96,6 +96,33 @@ def test_kernel_mix_equals_einsum_mix():
                                rtol=1e-5)
 
 
+def test_kernel_mix_flat_equals_resident_mix():
+    """kernel_mix's flat entry point rides round_fn_flat directly (no
+    tree-form state required anymore): a resident round with
+    mix_fn_flat=make_kernel_mix_flat() matches the engine's own
+    gossip.mix_flat round."""
+    import dataclasses
+
+    loss_fn, params, mask, cu, cv = quad_problem()
+    m = cu.shape[0]
+    P = topology.directed_random(jax.random.PRNGKey(5), m, 3)
+    batches = make_batches(cu, cv, 1, 2)
+
+    a1 = build(loss_fn, mask)
+    s1, lay = a1.init_flat({"body": cu, "head": cv})
+    s1, _ = a1.round_fn_flat(s1, P, batches, lay)
+
+    a2 = dataclasses.replace(build(loss_fn, mask),
+                             mix_fn_flat=kernel_mix.make_kernel_mix_flat())
+    s2, _ = a2.round_fn_flat(a2.init_flat({"body": cu, "head": cv})[0], P,
+                             batches, lay)
+
+    np.testing.assert_allclose(np.asarray(s1.flat), np.asarray(s2.flat),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(s1.mu), np.asarray(s2.mu),
+                               rtol=1e-5)
+
+
 def test_converges_to_personalized_optimum():
     """v_i -> cv_i (personal optimum, exact); de-biased u -> consensus near
     the average optimum.  With a CONSTANT lr the stationary point keeps an

@@ -134,3 +134,21 @@ def test_dryrun_collective_parser():
     assert out["reduce-scatter"]["bytes"] == 1024 * 4
     assert out["collective-permute"]["bytes"] == 8 * 8 * 4
     assert all(v["count"] == 1 for v in out.values())
+
+
+def test_flat_buffer_spec():
+    """The resident (m, d_flat) buffer: rows over the client axes, the
+    flat dim over TP only when it divides evenly (never padded)."""
+    from jax.sharding import PartitionSpec as P
+
+    assert sharding.flat_buffer_spec(SINGLE, ("data",), 1600, ("model",)) \
+        == P("data", "model")
+    # non-divisible d_flat replicates the flat dim instead of padding
+    assert sharding.flat_buffer_spec(SINGLE, ("data",), 1601, ("model",)) \
+        == P("data", None)
+    # multi-pod client axes become the tuple form
+    assert sharding.flat_buffer_spec(MULTI, ("pod", "data"), 32, ()) \
+        == P(("pod", "data"), None)
+    # degenerate: no client axes (single-client fsdp layout) replicates rows
+    assert sharding.flat_buffer_spec(SINGLE, (), 16, ("model",)) \
+        == P(None, "model")

@@ -91,6 +91,65 @@ def test_ppermute_schedule_permutation_semantics():
         np.testing.assert_array_equal(src, want)
 
 
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "xlstm-125m"])
+def test_resident_train_step_lowers(arch):
+    """build_train_step(resident=True): the FlatDFedPGPState — its
+    (m, d_flat) buffer, not a params tree — is the donated arg-0 carry,
+    and the round lowers with the schedule's SparseTopology as the mixing
+    argument."""
+    from repro.core.dfedpgp import FlatDFedPGPState
+
+    cfg = get_reduced(arch)
+    shape = _shape("train_4k", seq_len=32, global_batch=2)
+    layout = steps.decide_layout(MESH, arch, shape)
+    sched = topology.TopologySchedule.random(layout.n_clients, 0, seed=3)
+    fn, ins, outs, args, donate = steps.build_step(
+        cfg, MESH, layout, shape, resident=True, schedule=sched)
+    assert donate == (0,)
+    assert isinstance(args[0], FlatDFedPGPState)
+    assert args[0].flat.ndim == 2 and \
+        args[0].flat.shape[0] == layout.n_clients
+    assert isinstance(args[1], topology.SparseTopology)
+    with MESH:
+        compiled = jax.jit(fn, in_shardings=ins, out_shardings=outs,
+                           donate_argnums=donate).lower(*args).compile()
+    assert compiled is not None
+
+
+def test_build_train_step_rejects_mismatched_schedule():
+    """A configured topology whose client count disagrees with the mesh
+    layout can no longer be silently ignored (pre-PR-5 the kwarg did not
+    exist and ppermute always fell back to the default graph)."""
+    cfg = get_reduced("qwen2-0.5b")
+    shape = _shape("train_4k", seq_len=32, global_batch=2)
+    layout = steps.decide_layout(MESH, "qwen2-0.5b", shape)
+    sched = topology.TopologySchedule.ring(layout.n_clients + 3)
+    with pytest.raises(AssertionError, match="n_clients"):
+        steps.build_train_step(cfg, MESH, layout, shape, schedule=sched)
+
+
+def test_bf16_grads_cast_scoped_to_shared_mask():
+    """§Perf H2 narrows only the bytes that actually cross a data shard:
+    the shared-part gradients.  The personal (classifier) part never
+    leaves its rank, so it must stay f32."""
+    cfg = get_reduced("qwen2-0.5b")
+    layout = steps.Layout(("data",), (), ("model",), (), 1, 2)
+    algo, mask, pstruct, _ = steps.build_train_algo(cfg, MESH, layout,
+                                                    bf16_grads=True)
+    grads = jax.tree.map(lambda x: jnp.zeros(x.shape[1:], x.dtype), pstruct)
+    out = algo.grad_hook(grads)
+    n_personal = 0
+    for g, mk in zip(jax.tree.leaves(out), jax.tree.leaves(mask)):
+        if mk and g.ndim:
+            assert g.dtype == jnp.bfloat16
+        else:
+            assert g.dtype == jnp.float32
+            n_personal += 0 if mk else 1
+    assert n_personal > 0, "no personal leaf exercised the scope"
+    # the resident twin: the (d_flat,) row IS the shared part — cast whole
+    assert algo.grad_hook_flat(jnp.zeros((7,))).dtype == jnp.bfloat16
+
+
 def test_fsdp_layout_lowering():
     """deepseek-v2 reduced with fsdp layout on a (2,2) host mesh would need
     4 devices; on (1,1) the layout degenerates but must still lower."""
