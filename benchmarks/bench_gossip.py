@@ -44,6 +44,11 @@ import jax.numpy as jnp
 from repro.core import gossip, topology
 from repro.kernels import ops, ref
 
+try:                                     # python -m benchmarks.bench_gossip
+    from .common import accounted_bytes, peak_device_memory
+except ImportError:                      # python benchmarks/bench_gossip.py
+    from common import accounted_bytes, peak_device_memory
+
 ROOT = Path(__file__).resolve().parent.parent
 OUT = ROOT / "BENCH_gossip.json"
 
@@ -149,6 +154,12 @@ def bench_one(m: int, k: int, d: int, iters: int, on_tpu: bool) -> dict:
         "speedup_sparse": round(t_dense / t_sparse, 2),
         "parity_sparse_maxerr": parity_sparse,
         "parity_sparse_ok": bool(parity_sparse <= 1e-5),
+        # memory columns (benchmarks/common.py): allocator peak where the
+        # backend reports one (TPU/GPU; None on CPU), plus the
+        # deterministic operand footprint of each engine's step
+        "peak_mem_bytes": peak_device_memory(),
+        "accounted_bytes_dense": accounted_bytes(P, U, mu),
+        "accounted_bytes_sparse": accounted_bytes(topo.idx, topo.w, U, mu),
     }
     row.update(bench_resident(m, k, d, iters, topo, mu))
 

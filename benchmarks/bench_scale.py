@@ -1,0 +1,260 @@
+"""E9 — partial participation at scale (docs/scale.md).
+
+Times one resident DFedPGP-shaped round at m = 4k / 64k / 1M clients, all
+rows vs a sampled active subset, on the SAME (m, d_flat) resident buffer:
+
+  all-rows — every row pays the local steps (per-round synthetic batch
+             included, keyed per (round, client)) and the sparse
+             neighbor mix over the full topology;
+  sampled  — a seeded core.sampling.ParticipationSampler draws the active
+             subset per round; only those rows are gathered, stepped,
+             mixed over the induced re-normalized subgraph
+             (topology.induced_subgraph, computed INSIDE the timed round
+             — it is per-round work) and scattered back.  Dormant rows
+             are never materialized outside the resident buffer.
+
+The local step is synthetic — a pull toward a per-(round, client, step)
+random target followed by a small blockwise matmul — the compute shape of
+local SGD on flat rows without dragging a model into a 1M-row bench.
+Ending the step IN the matmul matters: a purely elementwise step gets
+rematerialized by XLA:CPU into each of the mix's k row-gathers (k x
+recompute, measured ~4x inflation on BOTH paths), which no real local
+step suffers because real steps end at matmul/reduction boundaries.
+Identical keys on both paths make frac=1.0 a parity cell, hard-gated by
+check_regression.py at maxerr <= 1e-5.  It is a TOLERANCE gate here, not
+bit-for-bit, only because the two jit programs tile the synthetic step's
+dot differently (ULP-level reduction-order drift); the REAL rounds share
+one vmapped local update, and tests/test_sampling.py pins
+round_fn_sampled at sample-all against round_fn_flat BIT-FOR-BIT.
+
+Per m the flat width is sized to keep the CPU run tractable and is
+recorded in the row — 1M rows run at a reduced d_flat, stated, not
+hidden.  Memory columns: allocator peak where the backend reports one
+(None on CPU) plus the deterministic accounted working-set footprint of
+each path, which the regression gate pins as a hard ceiling.
+
+Scatter in the timed round is XLA's `.at[active].set` — on CPU the Pallas
+gossip_scatter kernel only runs in interpret mode (a correctness path);
+its parity vs that scatter is recorded per row at the smallest m.
+
+  PYTHONPATH=src python benchmarks/bench_scale.py [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import gossip, sampling, topology
+from repro.kernels import ops, ref
+
+try:                                     # python -m benchmarks.bench_scale
+    from .common import accounted_bytes, peak_device_memory
+except ImportError:                      # python benchmarks/bench_scale.py
+    from common import accounted_bytes, peak_device_memory
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_scale.json"
+
+N_NEIGHBORS = 8
+K_LOCAL = 2
+LR = 0.05
+# flat width per client count: the full-grid rows keep the m * d product
+# (the resident buffer) near 256 MB so the 1M-row cell is honest about
+# running narrow
+D_FLAT = {4096: 4096, 65536: 1024, 1_000_000: 64}
+FRACS = (0.25, 0.1)
+
+
+def _local_steps(rows, keys, d, W):
+    """K_LOCAL synthetic local steps per row: pull toward a per-(round,
+    client, step) random target, then a blockwise (d/64, 64) @ (64, 64)
+    matmul — keyed so both paths generate identical data for identical
+    client ids, and dot-terminated so the step is a fusion barrier for
+    the downstream mix gathers (see module docstring)."""
+    def one(row, key):
+        for j in range(K_LOCAL):
+            tgt = jax.random.normal(jax.random.fold_in(key, j), (d,)) * 0.1
+            row = (1.0 - LR) * row + LR * tgt
+            row = (row.reshape(-1, 64) @ W).reshape(-1)
+        return row
+
+    return jax.vmap(one)(rows, keys)
+
+
+def make_rounds(topo, m, d, W):
+    """-> (round_full, round_sampled) jitted closures over one topology.
+
+    Both donate the resident buffer — exactly the training pattern
+    (FlatDFedPGPState is the donated jit carry in round_fn_flat /
+    round_fn_sampled), and what lets XLA scatter the sampled rows back
+    IN PLACE instead of copying all m rows to update n_active of them."""
+    import functools
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def round_full(flat, key):
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(
+            jnp.arange(m, dtype=jnp.int32))
+        flat = _local_steps(flat, keys, d, W)
+        return gossip.mix_rows(topo.idx, topo.w, flat)
+
+    @functools.partial(jax.jit, donate_argnums=(0,))
+    def round_sampled(flat, key, active):
+        P_act = topology.induced_subgraph(topo, active, renorm="row")
+        rows = jnp.take(flat, active, axis=0)
+        keys = jax.vmap(lambda i: jax.random.fold_in(key, i))(active)
+        rows = _local_steps(rows, keys, d, W)
+        rows = gossip.mix_rows(P_act.idx, P_act.w, rows)
+        return flat.at[active].set(rows)
+
+    return round_full, round_sampled
+
+
+def _time_rounds(step, iters):
+    """Best-of-N wall time of one full round including host-side per-round
+    work (sampler draw, key fold) — the quantity rounds/sec reports.  The
+    step carries the (donated) resident buffer round to round, like
+    training does."""
+    step(0)                                  # compile + warm sampler
+    best = float("inf")
+    for r in range(1, iters + 1):
+        t0 = time.perf_counter()
+        jax.block_until_ready(step(r))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def bench_m(m: int, d: int, iters: int, seed: int = 0) -> list[dict]:
+    key = jax.random.PRNGKey(m)
+    topo = topology.directed_random(key, m, N_NEIGHBORS)
+    flat = jax.random.normal(jax.random.fold_in(key, 1), (m, d))
+    W = jnp.eye(64) + jax.random.normal(jax.random.fold_in(key, 3),
+                                        (64, 64)) * 0.01
+    round_full, round_sampled = make_rounds(topo, m, d, W)
+
+    carry = {"x": jnp.copy(flat)}
+
+    def step_full(r):
+        carry["x"] = round_full(carry["x"], jax.random.fold_in(key, 100 + r))
+        return carry["x"]
+
+    t_full = _time_rounds(step_full, iters)
+
+    # sample-all parity: the sampled path at active = arange(m) against
+    # the all-rows round (sum-preserving induced re-norm + identical
+    # per-client keys) — the hard gate of check_regression.py (tolerance;
+    # see module docstring for why the bit-for-bit form lives in tests)
+    k_par = jax.random.fold_in(key, 999)
+    want = round_full(jnp.copy(flat), k_par)
+    got = round_sampled(jnp.copy(flat), k_par,
+                        jnp.arange(m, dtype=jnp.int32))
+    parity_err = float(jnp.abs(want - got).max())
+    parity = bool(parity_err <= 1e-5)
+
+    # scatter-kernel parity (interpret mode), smallest grid only: the
+    # compiled kernel is the TPU path; CPU certifies numerics
+    scatter_ok = None
+    if m <= 4096:
+        rows_s = jnp.arange(0, m, 7, dtype=jnp.int32)[:64]
+        X_s = jax.random.normal(jax.random.fold_in(key, 5),
+                                (rows_s.shape[0], d))
+        got_s = ops.gossip_scatter(rows_s, X_s, flat, force="pallas")
+        want_s = ref.gossip_scatter_ref(rows_s, X_s, flat)
+        scatter_ok = bool((np.asarray(got_s) == np.asarray(want_s)).all())
+
+    rows = []
+    for frac in FRACS:
+        sampler = sampling.ParticipationSampler("uniform", m, frac, seed)
+        n_act = sampler.n_active
+        carry_s = {"x": jnp.copy(flat)}
+
+        def step(r):
+            active = jnp.asarray(sampler.active_at(r))
+            carry_s["x"] = round_sampled(
+                carry_s["x"], jax.random.fold_in(key, 100 + r), active)
+            return carry_s["x"]
+
+        t_samp = _time_rounds(step, iters)
+        rows.append({
+            "m": m, "d_flat": d, "frac": frac, "n_active": n_act,
+            "k": N_NEIGHBORS + 1, "k_local": K_LOCAL,
+            "t_full_ms": round(t_full * 1e3, 2),
+            "t_sampled_ms": round(t_samp * 1e3, 2),
+            "rounds_per_s_full": round(1.0 / t_full, 3),
+            "rounds_per_s_sampled": round(1.0 / t_samp, 3),
+            "speedup_sampled": round(t_full / t_samp, 2),
+            "parity_sample_all_maxerr": parity_err,
+            "parity_sample_all_ok": parity,
+            "parity_scatter_ok": scatter_ok,
+            "peak_mem_bytes": peak_device_memory(),
+            # resident buffer + neighbor table: paid by BOTH paths
+            "accounted_bytes_resident": accounted_bytes(flat, topo.idx,
+                                                        topo.w),
+            # per-round transient working set: all-rows materializes a
+            # second (m, d) buffer + per-row keys; sampled touches only
+            # (n_active, d) gathered/stepped/mixed rows + the induced table
+            "accounted_bytes_round_full": 2 * m * d * 4 + m * 8,
+            "accounted_bytes_round_sampled":
+                2 * n_act * d * 4 + n_act * 8
+                + n_act * (N_NEIGHBORS + 1) * 8 + m * 4,
+        })
+    return rows
+
+
+def main(quick: bool = False, out: Path = OUT):
+    # quick grid is a strict SUBSET of the full grid (same d_flat per m)
+    # so check_regression.py can match every quick cell against the
+    # committed full artifact
+    ms = (4096,) if quick else (4096, 65536, 1_000_000)
+    iters = 3 if quick else 5
+    rows = []
+    for m in ms:
+        d = D_FLAT[m]
+        t0 = time.time()
+        for row in bench_m(m, d, iters):
+            rows.append(row)
+            print(f"m={m:8d} d={d:5d} frac={row['frac']:.2f} "
+                  f"full={row['t_full_ms']:9.1f}ms "
+                  f"sampled={row['t_sampled_ms']:9.1f}ms "
+                  f"speedup={row['speedup_sampled']:5.2f}x "
+                  f"parity={'OK' if row['parity_sample_all_ok'] else 'FAIL'}",
+                  flush=True)
+        print(f"  (m={m}: {time.time() - t0:.1f}s)", flush=True)
+
+    head = [r for r in rows if r["m"] == 65536 and r["frac"] == 0.25]
+    report = {
+        "bench": "partial_participation_scale",
+        "backend": jax.default_backend(),
+        "platform": platform.platform(),
+        "jax": jax.__version__,
+        "quick": quick,
+        "rows": rows,
+        "all_parity_ok": all(r["parity_sample_all_ok"] and
+                             r["parity_scatter_ok"] is not False
+                             for r in rows),
+        "headline_speedup_m65536_f025": (head[0]["speedup_sampled"]
+                                         if head else None),
+    }
+    out.write_text(json.dumps(report, indent=1))
+    print(f"\nwrote {out}")
+    if head:
+        ok = head[0]["speedup_sampled"] >= 4.0
+        print(f"[claim] sampled round >= 4x all-rows at m=65536, frac=0.25: "
+              f"{'CONFIRMS' if ok else 'REFUTES'} "
+              f"({head[0]['speedup_sampled']}x)")
+    assert report["all_parity_ok"], "sample-all parity failure"
+    return rows
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true", help="m=4096 only (CI)")
+    ap.add_argument("--out", type=Path, default=OUT)
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out)

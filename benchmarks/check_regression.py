@@ -25,12 +25,31 @@ With --fresh-compress, the E8 wire-codec artifact is gated too
   committed BENCH_compress.json baseline means the codec or the
   accounting regressed — no timing noise, no slack needed.
 
+With --fresh-scale, the E9 partial-participation artifact is gated too
+(docs/scale.md):
+
+- SAMPLE-ALL PARITY is a hard gate: the sampled round at frac=1.0 must
+  have matched the all-rows round to 1e-5 in the fresh run (the
+  bit-for-bit form of this claim is a tier-1 test, tests/test_sampling.py).
+- SCATTER PARITY is a hard gate where recorded: the Pallas gossip_scatter
+  kernel (interpret mode on CPU) must agree bit-for-bit with the XLA
+  scatter.
+- SPEEDUP is a ratio gate per (m, frac) cell present in both runs, capped
+  like the gossip gate so cross-runner variance cannot block PRs.
+- MEMORY is a hard ceiling: the accounted per-round working set of the
+  sampled path is deterministic in (m, d_flat, frac) — any fresh cell
+  exceeding the committed baseline means the path materializes more than
+  it used to, which is exactly the regression the sampled round exists to
+  prevent.  (The quick grid is a subset of the full grid, so every quick
+  cell has a baseline row.)
+
 Exit code 0 = pass; 1 = regression, with a per-shape report either way.
 
   PYTHONPATH=src python benchmarks/bench_gossip.py --quick --out fresh.json
   PYTHONPATH=src python -m benchmarks.bench_compress --quick --out fresh_c.json
+  PYTHONPATH=src python benchmarks/bench_scale.py --quick --out fresh_s.json
   python benchmarks/check_regression.py --fresh fresh.json \\
-      --fresh-compress fresh_c.json
+      --fresh-compress fresh_c.json --fresh-scale fresh_s.json
 """
 from __future__ import annotations
 
@@ -42,6 +61,7 @@ from pathlib import Path
 ROOT = Path(__file__).resolve().parent.parent
 BASELINE = ROOT / "BENCH_gossip.json"
 BASELINE_COMPRESS = ROOT / "BENCH_compress.json"
+BASELINE_SCALE = ROOT / "BENCH_scale.json"
 
 RATIO_FLOOR = 0.7        # fresh speedup may drop to 70% of baseline
 # The baseline artifact is committed from one machine and CI runs on
@@ -54,6 +74,11 @@ RATIO_FLOOR = 0.7        # fresh speedup may drop to 70% of baseline
 # gate regardless.
 FLOOR_CAP = 1.1
 RESIDENT_SLACK = 1.25    # resident round <= 1.25x the tree round
+# The E9 sampled-vs-all-rows speedup scales with 1/frac (4x-13x committed),
+# so its enforced floor is capped higher than the gossip gate's: a sampled
+# path that degenerates toward all-rows work (speedup -> ~1) still fails,
+# while cross-runner timing variance at healthy multiples cannot.
+SCALE_FLOOR_CAP = 2.0
 
 
 def load(path: Path) -> dict:
@@ -146,6 +171,53 @@ def check_compress(baseline: dict, fresh: dict) -> list:
     return failures
 
 
+def by_scale_cell(report: dict) -> dict:
+    return {(r["m"], r["frac"]): r for r in report.get("rows", [])}
+
+
+def check_scale(baseline: dict, fresh: dict) -> list:
+    """E9 gate: sample-all + scatter parity hard-fail; sampled speedup is
+    ratio-gated per (m, frac) cell; the deterministic accounted working
+    set of the sampled round is a hard ceiling."""
+    failures = []
+    base_rows, fresh_rows = by_scale_cell(baseline), by_scale_cell(fresh)
+    if not fresh_rows:
+        failures.append("fresh scale report has no rows")
+    for cell, row in sorted(fresh_rows.items()):
+        m, frac = cell
+        tag = f"m={m} frac={frac}"
+        if row.get("parity_sample_all_ok") is False:
+            failures.append(
+                f"{tag}: sample-all parity is False (maxerr "
+                f"{row.get('parity_sample_all_maxerr')}) — the sampled "
+                f"round diverged from the all-rows round")
+        if row.get("parity_scatter_ok") is False:
+            failures.append(
+                f"{tag}: gossip_scatter kernel parity is False")
+        base = base_rows.get(cell)
+        if base is None:
+            print(f"{tag}: no baseline cell, speedup "
+                  f"{row['speedup_sampled']}x (unchecked)")
+            continue
+        floor = min(base["speedup_sampled"] * RATIO_FLOOR, SCALE_FLOOR_CAP)
+        ok = row["speedup_sampled"] >= floor
+        print(f"{tag}: sampled speedup {row['speedup_sampled']}x vs "
+              f"baseline {base['speedup_sampled']}x (floor {floor:.2f}x) "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"{tag}: sampled speedup {row['speedup_sampled']}x below "
+                f"{RATIO_FLOOR}x of baseline {base['speedup_sampled']}x")
+        mem, base_mem = (row.get("accounted_bytes_round_sampled"),
+                         base.get("accounted_bytes_round_sampled"))
+        if mem is not None and base_mem is not None and mem > base_mem:
+            failures.append(
+                f"{tag}: sampled working set {mem} bytes exceeds the "
+                f"committed baseline {base_mem} (deterministic in the "
+                f"config — the path materializes more than it used to)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", type=Path, default=BASELINE,
@@ -158,12 +230,20 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh-compress", type=Path, default=None,
                     help="artifact of a fresh bench_compress.py --quick "
                          "run (enables the E8 gate)")
+    ap.add_argument("--baseline-scale", type=Path, default=BASELINE_SCALE,
+                    help="committed BENCH_scale.json")
+    ap.add_argument("--fresh-scale", type=Path, default=None,
+                    help="artifact of a fresh bench_scale.py --quick run "
+                         "(enables the E9 gate)")
     args = ap.parse_args(argv)
 
     failures = check(load(args.baseline), load(args.fresh))
     if args.fresh_compress is not None:
         failures += check_compress(load(args.baseline_compress),
                                    load(args.fresh_compress))
+    if args.fresh_scale is not None:
+        failures += check_scale(load(args.baseline_scale),
+                                load(args.fresh_scale))
     if failures:
         print("\nBENCH REGRESSION:")
         for f in failures:

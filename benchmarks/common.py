@@ -38,6 +38,38 @@ def run(algo, simcfg, **kw):
     return h
 
 
+def peak_device_memory():
+    """Peak bytes in use on device 0, from the backend's allocator stats
+    (jax Device.memory_stats — populated on TPU/GPU).  The CPU backend
+    reports no allocator stats, so benches pair this with the deterministic
+    bytes-accounting columns (accounted_* below) and record None here —
+    the committed artifact then documents which meter produced the number.
+    """
+    import jax
+    try:
+        stats = jax.devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    peak = stats.get("peak_bytes_in_use")
+    return int(peak) if peak else None
+
+
+def accounted_bytes(*arrays) -> int:
+    """Deterministic memory meter: total bytes of the given live arrays
+    (buffers, working sets, neighbor tables).  Unlike allocator peaks this
+    is identical across runners, so check_regression.py can pin it as a
+    hard ceiling — any growth is a real change in what the path
+    materializes, not noise."""
+    total = 0
+    for a in arrays:
+        leaves = a if isinstance(a, (list, tuple)) else [a]
+        for x in leaves:
+            total += int(x.size) * int(x.dtype.itemsize)
+    return total
+
+
 def save_rows(name: str, rows: list[dict]):
     ARTIFACTS.mkdir(parents=True, exist_ok=True)
     (ARTIFACTS / f"{name}.json").write_text(json.dumps(rows, indent=1))

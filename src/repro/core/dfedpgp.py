@@ -116,8 +116,13 @@ class DFedPGP:
     # runs on P_g = (1-g) I + g P.  Sparse codecs (topk/randk) can only
     # publish K coordinates per crossing, so g < 1 slows consensus to the
     # pipe's delivery rate — without it the error-feedback memory grows
-    # instead of draining (docs/compress.md §Step size).
-    codec_gamma: float = 1.0
+    # instead of draining (docs/compress.md §Step size).  "auto" anneals
+    # the step per round from the residual-to-signal ratio instead of a
+    # static guess: g = ||u|| / (||u|| + ||ef||), clipped to [0.05, 1] —
+    # a draining residual pushes g back toward the plain tracked mix, a
+    # growing one backs consensus off until the pipe catches up
+    # (docs/compress.md §Step size; resident sync rounds only).
+    codec_gamma: Any = 1.0         # float in (0, 1], or "auto"
 
     # ------------------------------------------------------------------
     def init(self, stacked_params) -> DFedPGPState:
@@ -281,6 +286,20 @@ class DFedPGP:
                              "exclusive: the codec path owns the wire "
                              "crossing (gossip.mix_flat) — a mix override "
                              "would bypass the error-feedback ledger")
+        if isinstance(self.codec_gamma, str):
+            if self.codec_gamma != "auto":
+                raise ValueError(
+                    f"codec_gamma must be a float in (0, 1] or 'auto'; "
+                    f"got {self.codec_gamma!r}")
+            if self.codec is None or self.codec.exact:
+                raise ValueError(
+                    "codec_gamma='auto' anneals the lossy-codec consensus "
+                    "step; the exact/uncompressed mix never blends (drop "
+                    "the knob or use a lossy codec)")
+            if self.gossip_dtype is not None:
+                raise ValueError("codec and gossip_dtype are mutually "
+                                 "exclusive: the codec IS the wire format")
+            return
         g = float(self.codec_gamma)
         if self.codec is None or self.codec.exact:
             # same loud-knob rule as block_m: a consensus step only
@@ -304,6 +323,21 @@ class DFedPGP:
         if not 0.0 < g <= 1.0:
             raise ValueError(f"codec_gamma must be in (0, 1], got "
                              f"{self.codec_gamma}")
+
+    def _gamma_value(self, flat, ef):
+        """The round's consensus step size: the static knob as-is, or the
+        adaptive anneal (codec_gamma="auto") — a traced f32 scalar
+        g = ||u|| / (||u|| + ||ef||) over the round's working set, clipped
+        to [0.05, 1].  With a zero residual the ratio is exactly 1.0 (the
+        plain tracked mix); as the error-feedback memory grows relative to
+        the signal, g backs off so the sparse pipe drains instead of
+        accumulating (docs/compress.md §Step size)."""
+        if not isinstance(self.codec_gamma, str):
+            return self.codec_gamma
+        un = jnp.linalg.norm(flat.astype(jnp.float32))
+        en = jnp.linalg.norm(ef.astype(jnp.float32))
+        eps = jnp.float32(1e-12)
+        return jnp.clip((un + eps) / (un + en + eps), 0.05, 1.0)
 
     # ------------------------------------------------------------------
     def local_update_flat(self, flat_row, personal, mu_i, opt_u, opt_v,
@@ -463,7 +497,7 @@ class DFedPGP:
             flat, mu, ef, ref = gossip.mix_flat(
                 P, flat, state.mu, mode=self.gossip, codec=self.codec,
                 ef=state.ef, ref=state.ref, key=key,
-                codec_gamma=self.codec_gamma)
+                codec_gamma=self._gamma_value(flat, state.ef))
         else:
             flat, mu = gossip.mix_flat(P, flat, state.mu, mode=self.gossip,
                                        wire_dtype=self.gossip_dtype)
@@ -472,6 +506,106 @@ class DFedPGP:
                                      state.round + 1, ef, ref)
         metrics = {"loss_v": jnp.mean(loss_v), "loss_u": jnp.mean(loss_u),
                    "mu_min": jnp.min(mu), "mu_max": jnp.max(mu)}
+        return new_state, metrics
+
+    # ------------------------------------------------------------------
+    def round_fn_sampled(self, state: FlatDFedPGPState, P_act, active,
+                         batches, layout: gossip.FlatLayout,
+                         step_gate_u=None):
+        """Partial-participation resident round (docs/scale.md): only the
+        `active` clients act.  Their rows (params, mu, momentum, ef/ref)
+        are gathered from the resident buffer, the usual local steps +
+        directed mixing run on the compact (n_active, d_flat) working set,
+        and the results scatter back — under gossip="pallas" through the
+        kernels/gossip_scatter.py kernel, which aliases the big buffer and
+        never touches a dormant row.
+
+        P_act: the round's topology RESTRICTED to the active subset in
+        compact ids (topology.induced_subgraph / TopologySchedule.induced
+        with renorm="row" — the sum-preserving re-normalization is what
+        makes active=arange(m) bit-identical to round_fn_flat,
+        tests/test_sampling.py).  active: (n_active,) unique global ids,
+        sorted (the sampler's output); batches and step_gate_u are COMPACT
+        — leaves lead with (n_active, K, B, ...).
+
+        Dormant rows are exactly frozen: params, momentum, codec memory
+        and mu never move (the sync pull mix is row-stochastic, so no
+        active client's weight references a dormant row after the induced
+        re-normalization, and Σmu over dormant rows is conserved
+        trivially).  Metrics are means over the ACTIVE clients; mu stats
+        span the full buffer."""
+        if self.mix_fn is not None or self.mix_fn_flat is not None:
+            raise ValueError(
+                "mix overrides operate on the full resident buffer "
+                "(ppermute offsets address all m shards); the sampled "
+                "round mixes the compact working set — drop the override "
+                "or use round_fn_flat")
+        if self.grad_hook is not None and self.grad_hook_flat is None:
+            raise ValueError("grad_hook expects tree-form shared-part "
+                             "gradients; provide grad_hook_flat (the "
+                             "(d_flat,) row form) or use the tree-form "
+                             "round_fn")
+        lr_scale = self.lr_decay ** state.round.astype(jnp.float32)
+        active = jnp.asarray(active, jnp.int32)
+        if step_gate_u is None:
+            shp = jax.tree.leaves(batches["u"])[0].shape[:2]  # (n_act, K_u)
+            step_gate_u = jnp.ones(shp, jnp.float32)
+
+        take = lambda a: jnp.take(a, active, axis=0)
+        flat_a = take(state.flat)
+        mu_a = take(state.mu)
+        opt_u_a = SGDState(take(state.opt_u.momentum))
+        personal_a = jax.tree.map(take, state.personal)
+        opt_v_a = SGDState(jax.tree.map(take, state.opt_v.momentum))
+
+        def client(flat_row, personal, mu_i, opt_u, opt_v, bv, bu, gate):
+            return self.local_update_flat(
+                flat_row, personal, mu_i, opt_u, opt_v, bv, bu,
+                lr_scale, gate, layout)
+
+        flat_a, personal_a, opt_u_a, opt_v_a, (loss_v, loss_u) = jax.vmap(
+            client)(flat_a, personal_a, mu_a, opt_u_a, opt_v_a,
+                    batches["v"], batches["u"], step_gate_u)
+
+        if self.codec is not None:
+            key = jax.random.fold_in(
+                jax.random.PRNGKey(self.codec.seed), state.round)
+            ef_a = take(state.ef)
+            ref_a = take(state.ref)
+            flat_a, mu_a, ef_a, ref_a = gossip.mix_flat(
+                P_act, flat_a, mu_a, mode=self.gossip, codec=self.codec,
+                ef=ef_a, ref=ref_a, key=key,
+                codec_gamma=self._gamma_value(flat_a, ef_a))
+        else:
+            ef_a = ref_a = None
+            flat_a, mu_a = gossip.mix_flat(
+                P_act, flat_a, mu_a, mode=self.gossip,
+                wire_dtype=self.gossip_dtype)
+
+        # ---- scatter the compact working set back; dormant rows never
+        # materialize (the pallas path aliases the buffer in place) ----
+        if self.gossip == "pallas":
+            from repro.kernels import ops
+            put = lambda buf, new: ops.gossip_scatter(active, new, buf,
+                                                      force="pallas")
+        else:
+            put = lambda buf, new: buf.at[active].set(new.astype(buf.dtype))
+        flat = put(state.flat, flat_a)
+        mu = state.mu.at[active].set(mu_a)
+        opt_u = SGDState(put(state.opt_u.momentum, opt_u_a.momentum))
+        personal = jax.tree.map(lambda full, new: full.at[active].set(new),
+                                state.personal, personal_a)
+        opt_v = SGDState(jax.tree.map(
+            lambda full, new: full.at[active].set(new),
+            state.opt_v.momentum, opt_v_a.momentum))
+        ef = state.ef if ef_a is None else put(state.ef, ef_a)
+        ref = state.ref if ref_a is None else put(state.ref, ref_a)
+
+        new_state = FlatDFedPGPState(flat, personal, mu, opt_u, opt_v,
+                                     state.round + 1, ef, ref)
+        metrics = {"loss_v": jnp.mean(loss_v), "loss_u": jnp.mean(loss_u),
+                   "mu_min": jnp.min(mu), "mu_max": jnp.max(mu),
+                   "n_active": jnp.asarray(active.shape[0], jnp.int32)}
         return new_state, metrics
 
     # ------------------------------------------------------------------

@@ -286,7 +286,12 @@ def mix_flat(P, flat: jnp.ndarray, mu: jnp.ndarray, *,
     if mode not in MODES:
         raise ValueError(f"gossip mode {mode!r}; known: {MODES}")
     _check_block_m(mode, block_m)
-    if float(codec_gamma) != 1.0 and (codec is None or codec.exact):
+    # a traced gamma is the adaptive anneal (DFedPGP codec_gamma="auto"):
+    # its value only exists inside jit, so the static checks move to the
+    # caller (DFedPGP._check_codec validates the configuration)
+    traced_gamma = isinstance(codec_gamma, jax.core.Tracer)
+    if (codec is None or codec.exact) and \
+            (traced_gamma or float(codec_gamma) != 1.0):
         # same loud-knob rule as block_m: the consensus step only exists
         # on the lossy codec path
         raise ValueError(
@@ -311,9 +316,12 @@ def mix_flat(P, flat: jnp.ndarray, mu: jnp.ndarray, *,
         # column-stochastic if P is), so the push-sum de-bias and the
         # mass ledger are untouched.  g < 1 slows consensus to the rate a
         # SPARSE pipe can actually deliver; g = 1 is the plain tracked mix
-        g = float(codec_gamma)
-        if not 0.0 < g <= 1.0:
-            raise ValueError(f"codec_gamma must be in (0, 1], got {g}")
+        if traced_gamma:
+            g = codec_gamma.astype(jnp.float32)
+        else:
+            g = float(codec_gamma)
+            if not 0.0 < g <= 1.0:
+                raise ValueError(f"codec_gamma must be in (0, 1], got {g}")
         sw = self_weight_of(P)                                # (m,)
         sw_g = (1.0 - g) + g * sw
         payload, ef2, ref2 = feedback.publish(

@@ -86,6 +86,25 @@ def total_mass(mu: jnp.ndarray, *in_flight_mus) -> jnp.ndarray:
     return tot
 
 
+def mass_split(mu: jnp.ndarray, active_mask, *in_flight_mus):
+    """Partial-participation mass ledger (docs/scale.md): the conserved
+    total split into (active, dormant, in-flight) components.
+
+    Under partial participation the invariant refines: dormant local mu is
+    FROZEN (a dormant client neither steps nor fires), active mu moves only
+    through column-stochastic fires, and mass addressed to dormant clients
+    waits in the persistent mailbox inbox — so active + dormant + in-flight
+    equals the initial Σmu exactly, which is what
+    tests/test_sampling.py::test_dormant_mass_conserved pins to f32."""
+    act = jnp.asarray(active_mask)
+    active = jnp.sum(jnp.where(act, mu, 0.0))
+    dormant = jnp.sum(jnp.where(act, 0.0, mu))
+    flight = jnp.zeros((), mu.dtype)
+    for extra in in_flight_mus:
+        flight = flight + jnp.sum(extra)
+    return active, dormant, flight
+
+
 def consensus(state: PushSumState):
     """De-biased average across clients — the deployment/serving model."""
     z = debias(state)

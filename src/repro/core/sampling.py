@@ -1,0 +1,104 @@
+"""Per-round partial participation: which clients act this round.
+
+Real DPFL fleets never have all m clients online at once (DisPFL and the
+partial-model line both evaluate under client sampling), and the resident
+(m, d_flat) buffer makes all-rows rounds the dominant cost at scale.  The
+`ParticipationSampler` is the ONE object that decides the round's active
+subset, the way `TopologySchedule` is the one object that decides who talks
+to whom: a pure host-side function of (kind, m, frac, seed, t), so a run is
+reproducible from its config and two regimes sampling with the same seed
+agree on the subset (docs/scale.md).
+
+Kinds:
+- "full"    — every client, every round (the seed-repo behavior; the
+              sampled code path with this sampler is bit-identical to the
+              unsampled one — tests/test_sampling.py).
+- "uniform" — a uniform-random k = max(1, round(frac*m)) subset per round.
+- "trace"   — availability-trace-driven via `hetero.profiles`: rank clients
+              by ticks-until-reachable at round t (available-now first),
+              break ties with the round's RNG, take k.  The subset size
+              stays FIXED at k even when fewer than k clients are on-duty
+              (the soonest-to-wake fill the shortfall), so the jitted round
+              function keeps one static shape instead of retracing per
+              round.
+
+The emitted ids are sorted int32 — the gather/scatter row order of the
+compact working set, and the order `topology.induced_subgraph` re-indexes
+the round's graph by.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.hetero import profiles as profiles_mod
+
+KINDS = ("full", "uniform", "trace")
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ParticipationSampler:
+    """t -> sorted (n_active,) int32 global client ids.
+
+    Determinism: `active_at(t)` seeds a fresh generator with the pair
+    (seed, t) — the subset is a pure function of the config and the round
+    index, independent of call order, like `TopologySchedule.at`.
+    """
+    kind: str
+    m: int
+    frac: float = 1.0
+    seed: int = 0
+    profile: Optional[profiles_mod.ClientProfile] = None
+
+    def __post_init__(self):
+        if self.kind not in KINDS:
+            raise ValueError(
+                f"participation kind {self.kind!r}; known: {KINDS}")
+        if not 0.0 < self.frac <= 1.0:
+            raise ValueError(
+                f"participation frac must be in (0, 1]; got {self.frac}")
+        if self.kind == "trace":
+            if self.profile is None:
+                raise ValueError(
+                    "participation='trace' needs the hetero profile that "
+                    "carries the availability traces (hetero != 'uniform' "
+                    "with availability < 1)")
+            profiles_mod.validate_profile(self.profile, self.m)
+        if self.m < 1:
+            raise ValueError(f"need m >= 1 clients, got {self.m}")
+
+    @property
+    def n_active(self) -> int:
+        """Static per-round subset size — the compile-time row count of the
+        compact working set."""
+        if self.kind == "full":
+            return self.m
+        return max(1, int(round(self.frac * self.m)))
+
+    def _rng(self, t) -> np.random.Generator:
+        return np.random.default_rng([int(self.seed), int(t)])
+
+    def active_at(self, t) -> np.ndarray:
+        """Sorted (n_active,) int32 global ids of the round-t participants."""
+        k = self.n_active
+        if self.kind == "full" or k >= self.m:
+            return np.arange(self.m, dtype=np.int32)
+        rng = self._rng(t)
+        if self.kind == "uniform":
+            ids = rng.choice(self.m, size=k, replace=False)
+        else:
+            # soonest-reachable first; random tiebreak among equals so the
+            # always-on clients rotate instead of id-order favoritism
+            wait = profiles_mod.time_to_available(self.profile, t)
+            order = np.lexsort((rng.random(self.m), wait))
+            ids = order[:k]
+        return np.sort(ids).astype(np.int32)
+
+    def active_mask(self, t) -> np.ndarray:
+        """(m,) bool — the async regime's participation gate (AND-ed into
+        the virtual clock's time_ok mask, hetero/runtime.py)."""
+        mask = np.zeros(self.m, bool)
+        mask[self.active_at(t)] = True
+        return mask

@@ -27,6 +27,23 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# Dense-degree ceiling (docs/scale.md): constructors whose neighbor table
+# is O(m^2)-shaped — fully_connected's (m, m) SparseTopology, the
+# undirected builder's dense host matrices — refuse above this m instead
+# of silently allocating gigabytes.  4096 is the largest m where the
+# (m, m) f32 table is still a "small" 64 MiB.
+MAX_DENSE_M = 4096
+
+
+def _check_dense_degree(m: int, what: str) -> None:
+    if m > MAX_DENSE_M:
+        raise ValueError(
+            f"{what} builds an O(m^2)-shaped table; m={m} > "
+            f"MAX_DENSE_M={MAX_DENSE_M} would allocate "
+            f"{m * m * 4 / 2**30:.1f} GiB of neighbor weights.  At scale "
+            f"use a sparse-degree kind (random/exponential/ring) — "
+            f"docs/scale.md")
+
 
 class SparseTopology(NamedTuple):
     """Neighbor-indexed row-stochastic mixing pattern.
@@ -94,8 +111,24 @@ def densify(P) -> jnp.ndarray:
 def directed_random(key, m: int, n_neighbors: int) -> SparseTopology:
     """Paper's topology: every client pulls from `n` uniform random
     in-neighbors plus itself; uniform weights 1/(n+1).  Row-stochastic;
-    k = n+1."""
+    k = n+1.
+
+    Above MAX_DENSE_M clients the per-row permutation draw (an O(m^2)
+    vmapped intermediate) switches to an O(m*n) randint draw: neighbors
+    are sampled uniformly WITH replacement among the m-1 peers (the
+    skip-self shift keeps self out).  A duplicate in-edge just doubles
+    that neighbor's pull weight; at n << m collisions have probability
+    ~n^2/2m per row, negligible at the scales the fast path serves
+    (docs/scale.md §Topologies at scale).  Both paths are deterministic
+    in `key`; the small-m tables are unchanged."""
     n = min(n_neighbors, m - 1)
+    if m > MAX_DENSE_M:
+        draws = jax.random.randint(key, (m, n), 0, m - 1)
+        rows = jnp.arange(m)[:, None]
+        nb = jnp.where(draws >= rows, draws + 1, draws)    # skip self
+        idx = jnp.concatenate([rows, nb], axis=1)
+        w = jnp.full((m, n + 1), 1.0 / (n + 1), jnp.float32)
+        return SparseTopology(idx.astype(jnp.int32), w)
     keys = jax.random.split(key, m)
 
     def row(i, k):
@@ -133,7 +166,9 @@ def fully_connected(m: int) -> SparseTopology:
     m-1 peers in id order): nothing to gain asymptotically, but returning a
     SparseTopology keeps `mix_any` dispatch uniform — the simulator's
     gossip knob no longer silently densifies for this graph.  `.dense()`
-    recovers the classic (m, m) averaging matrix."""
+    recovers the classic (m, m) averaging matrix.  Raises above
+    MAX_DENSE_M — the table itself is O(m^2)."""
+    _check_dense_degree(m, "fully_connected (k = m)")
     rows = jnp.arange(m)[:, None]
     others = jnp.arange(m)[None, :] + rows + 1          # (m, m): i+1 .. i+m
     idx = jnp.concatenate([rows, jnp.mod(others, m)[:, : m - 1]], axis=1)
@@ -251,6 +286,7 @@ def undirected_random(key, m: int, n_neighbors: int) -> SparseTopology:
     node is picked by many peers — so the sparse width k = dmax+1 is a
     deterministic function of (m, n) and jitted round functions never
     retrace across rounds."""
+    _check_dense_degree(m, "undirected_random (dense host-side builder)")
     n = min(n_neighbors, m - 1)
     picks = np.asarray(directed_random(key, m, n).idx)     # (m, n+1), col 0=self
     A = np.zeros((m, m), bool)
@@ -272,6 +308,71 @@ def undirected_random(key, m: int, n_neighbors: int) -> SparseTopology:
     idx = np.where(w > 0, order, np.arange(m)[:, None])
     return SparseTopology(jnp.asarray(idx, jnp.int32),
                           jnp.asarray(w, jnp.float32))
+
+
+# ---------------------------------------------------------------------------
+# partial participation: induced subgraphs (docs/scale.md)
+# ---------------------------------------------------------------------------
+def induced_subgraph(P: SparseTopology, active,
+                     renorm: str = "row") -> SparseTopology:
+    """The subgraph induced by the `active` client subset, re-indexed to the
+    compact [0, n_active) id space.
+
+    active: (n_active,) unique global client ids (the sampler emits them
+    sorted; any order works — compact id p is the position of active[p]).
+    Edges whose endpoint is dormant are dropped (padded to (self, 0), the
+    SparseTopology convention), and the surviving weights are re-scaled so
+    each row ("row", the pull form) or each sender column ("col", the push
+    form) sums to what it summed to in the FULL graph.
+
+    The scale factor is orig_sum / alive_sum — NOT a renormalization to
+    1.0 — deliberately: when every edge survives (sample-all), the two
+    sums are the same floating-point value, the factor is exactly 1.0 in
+    IEEE arithmetic, and the induced weights are bit-identical to the
+    originals.  That is what makes the sample-all ≡ full-participation
+    parity contract (tests/test_sampling.py) hold bit-for-bit; a
+    renormalize-to-1 would perturb the last ulp (three f32 thirds do not
+    sum to 1.0) and break it.
+
+    "col" conserves push-sum mass within the active set: an active
+    sender's mass that would have ridden a dropped active→dormant edge is
+    re-split over its surviving active out-edges, so Σmu over active rows
+    is unchanged by the mix and dormant mu stays frozen — the dormant-row
+    mass ledger of docs/scale.md.  Jittable in `active` (shapes depend
+    only on n_active); O(n*k + m) work."""
+    if renorm not in ("row", "col"):
+        raise ValueError(f"renorm must be 'row' or 'col'; got {renorm!r}")
+    m, k = P.idx.shape
+    active = jnp.asarray(active, jnp.int32)
+    n = active.shape[0]
+    pos = jnp.full((m,), -1, jnp.int32).at[active].set(
+        jnp.arange(n, dtype=jnp.int32))
+    gidx = P.idx[active]                       # (n, k) global neighbor ids
+    gw = P.w[active]
+    cpos = pos[gidx]                           # compact ids, -1 if dormant
+    alive = (cpos >= 0) & (gw > 0)
+    rows_c = jnp.arange(n, dtype=jnp.int32)[:, None]
+    cidx = jnp.where(alive, cpos, rows_c)      # dead edges -> (self, 0) pad
+    wz = jnp.where(alive, gw, 0.0)
+    if renorm == "row":
+        orig = gw.sum(1, keepdims=True)
+        live = wz.sum(1, keepdims=True)
+        w = wz * jnp.where(live > 0, orig / live, 0.0)
+        # a row whose every positive edge went dormant (possible only if
+        # the constructor gave self weight 0) freezes on itself instead of
+        # zeroing out
+        first = jnp.zeros((1, k), bool).at[0, 0].set(True)
+        w = jnp.where((live <= 0) & first, orig, w)
+    else:
+        # per-SENDER column sums: full graph vs induced (both scatter-add
+        # the same values in the same order at sample-all -> exact 1.0)
+        orig_col = jnp.zeros((m,), jnp.float32).at[P.idx.reshape(-1)].add(
+            P.w.reshape(-1))
+        alive_col = jnp.zeros((m,), jnp.float32).at[gidx.reshape(-1)].add(
+            wz.reshape(-1))
+        scale = jnp.where(alive_col > 0, orig_col / alive_col, 0.0)
+        w = wz * scale[gidx]
+    return SparseTopology(cidx, w.astype(jnp.float32))
 
 
 # ---------------------------------------------------------------------------
@@ -308,6 +409,10 @@ class TopologySchedule:
         if self.kind not in self.KINDS:
             raise ValueError(
                 f"schedule kind {self.kind!r}; known: {self.KINDS}")
+        # fail at schedule construction, not on the first .at(t) call deep
+        # inside a round loop
+        if self.kind in ("full", "undirected"):
+            _check_dense_degree(self.m, f"topology={self.kind!r}")
 
     # -- constructors ------------------------------------------------------
     @classmethod
@@ -359,6 +464,12 @@ class TopologySchedule:
         return fully_connected(self.m)
 
     __call__ = at
+
+    def induced(self, t, active, renorm: str = "row") -> SparseTopology:
+        """The round-t pattern restricted to the `active` subset — the ONE
+        topology object stays the single source of who-talks-to-whom under
+        partial participation (docs/scale.md)."""
+        return induced_subgraph(self.at(t), active, renorm)
 
     def permutation_offsets(self) -> tuple:
         """For one-peer schedules: the per-round pull offsets, derived from

@@ -18,7 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compress
-from repro.core import baselines, dfedpgp, gossip, partition, topology
+from repro.core import baselines, dfedpgp, gossip, partition, sampling, \
+    topology
 from repro.data import ClientData, make_dataset, sample_batches
 from repro.hetero import profiles as hetero_profiles
 from repro.hetero.runtime import AsyncRuntime
@@ -84,8 +85,22 @@ class SimConfig:
     codec_bits: int = 4               # qsgd word size (4 or 8)
     # consensus step size for lossy codecs (CHOCO; docs/compress.md §Step
     # size): sparse pipes need g < 1 or the error-feedback memory grows
-    # faster than it drains
-    codec_gamma: float = 1.0
+    # faster than it drains.  "auto" anneals per round from the
+    # residual-to-signal ratio ||u||/(||u||+||ef||) instead of a static
+    # guess (sync resident rounds only)
+    codec_gamma: object = 1.0      # float in (0, 1], or "auto"
+    # ---- partial participation (docs/scale.md) ----
+    # "full"    — every client every round (the seed behavior);
+    # "uniform" — a seeded uniform-random subset of participation_frac*m
+    #             clients per round;
+    # "trace"   — availability-trace-driven via the hetero profile (rank
+    #             by ticks-until-reachable, subset size stays fixed).
+    # Sync: rides the resident flat engine (dfedpgp / flat-core codec
+    # runs) — only the active rows are gathered, stepped, mixed over the
+    # induced subgraph and scattered back.  Async: gates the virtual
+    # clock; dormant clients' mass waits in the persistent inbox.
+    participation: str = "full"
+    participation_frac: float = 1.0
     # stale-mass discounting (ROADMAP async follow-up (a)): scale each
     # sender's lazy self share by its push-delay class
     # (topology.staleness_self_weight) so receivers' push-sum weights
@@ -183,6 +198,29 @@ def build_flat_core(name: str, loss_fn, mask,
 
 # the async runtime's historical name for the same constructor
 build_async_core = build_flat_core
+
+
+def make_sampler(sim: SimConfig, profile=None):
+    """The experiment's ParticipationSampler from the SimConfig knobs —
+    None for full participation (the seed behavior).  "trace" needs the
+    availability profile; pass the async runtime's instance so both
+    regimes rank the same traces, or let the sync path build it from the
+    same hetero knobs (deterministic in sim.seed either way)."""
+    if sim.participation == "full":
+        if sim.participation_frac != 1.0:
+            raise ValueError(
+                f"participation_frac={sim.participation_frac} needs "
+                f"participation='uniform' or 'trace' — the 'full' sampler "
+                f"acts on every client (drop the knob or pick a kind)")
+        return None
+    if sim.participation == "trace" and profile is None:
+        profile = hetero_profiles.make_profile(
+            sim.hetero, sim.m, spread=sim.speed_spread,
+            push_delay_max=sim.push_delay_max,
+            availability=sim.availability, seed=sim.seed)
+    return sampling.ParticipationSampler(
+        sim.participation, sim.m, sim.participation_frac, sim.seed,
+        profile if sim.participation == "trace" else None)
 
 
 def make_schedule(name: str, sim: SimConfig) -> topology.TopologySchedule:
@@ -299,12 +337,32 @@ def run_experiment(algo_name: str, sim: SimConfig,
               f"path")
     schedule = None if (algo_name in CFL or algo_name == "local") else \
         make_schedule(algo_name, sim)
+    sampler = make_sampler(sim)
+    if sampler is not None and not use_flat:
+        raise ValueError(
+            f"partial participation gathers/scatters the resident flat "
+            f"buffer (docs/scale.md); {algo_name!r} with "
+            f"resident={sim.resident} has no flat engine — use dfedpgp "
+            f"with resident=True (or a flat-core codec run)")
     if use_flat:
         state, layout = algo.init_flat(stacked)
         eval_params = lambda s: algo.eval_params_flat(s, layout)
     else:
         state = algo.init(stacked)
         eval_params = algo.eval_params
+
+    @jax.jit
+    def round_sampled_jit(state, P_act, active, batches, gate):
+        # gather the active clients' batches/gates INSIDE the jit (active
+        # has a static per-config length, so the trace is reused across
+        # rounds); the round itself runs on the compact working set
+        kv = algo.k_v
+        ba = jax.tree.map(lambda a: jnp.take(a, active, axis=0), batches)
+        b = {"v": jax.tree.map(lambda a: a[:, :kv], ba),
+             "u": jax.tree.map(lambda a: a[:, kv:], ba)}
+        g = None if gate is None else jnp.take(gate, active, axis=0)
+        return algo.round_fn_sampled(state, P_act, active, b, layout,
+                                     step_gate_u=g)
 
     @jax.jit
     def round_jit(state, ctx, batches, gate):
@@ -346,6 +404,7 @@ def run_experiment(algo_name: str, sim: SimConfig,
         # schedule seeds itself from (sim.seed, round)
         _, k_batch, k_cfl = jax.random.split(k_r, 3)
         batches = sample_batches(k_batch, data, k_total, sim.batch)
+        active = P_act = None
         if algo_name in CFL:
             ctx = k_cfl
         elif algo_name == "local":
@@ -353,9 +412,15 @@ def run_experiment(algo_name: str, sim: SimConfig,
         else:
             topo = schedule.at(r)
             ctx = topo.dense() if sim.gossip == "dense" else topo
-            idx_np, w_np = np.asarray(topo.idx), np.asarray(topo.w)
+            P_meter = topo
+            if sampler is not None:
+                active = jnp.asarray(sampler.active_at(r))
+                P_act = topology.induced_subgraph(topo, active, "row")
+                P_meter = P_act   # only active<->active edges carry bytes
+            idx_np, w_np = np.asarray(P_meter.idx), np.asarray(P_meter.w)
+            n_rows = idx_np.shape[0]
             edges = int(((w_np > 0)
-                         & (idx_np != np.arange(sim.m)[:, None])).sum())
+                         & (idx_np != np.arange(n_rows)[:, None])).sum())
             wire_total += edges * wire_rb
         if step_gates is not None:
             gate = jnp.asarray(step_gates, jnp.float32)
@@ -363,7 +428,11 @@ def run_experiment(algo_name: str, sim: SimConfig,
                 gate[:, :k_total]
         else:
             gate_u = None
-        state, metrics = round_jit(state, ctx, batches, gate_u)
+        if active is not None:
+            state, metrics = round_sampled_jit(state, P_act, active,
+                                               batches, gate_u)
+        else:
+            state, metrics = round_jit(state, ctx, batches, gate_u)
 
         if (r + 1) % eval_every == 0 or r == sim.rounds - 1:
             acc, _ = evaluate(eval_params(state), data, model_cfg)
@@ -391,7 +460,7 @@ def run_experiment(algo_name: str, sim: SimConfig,
 # ---------------------------------------------------------------------------
 def async_round(runtime: AsyncRuntime, tick_fn, state, schedule, data,
                 sim: SimConfig, k_run, tick0: int,
-                wire_edges=jnp.zeros((), jnp.int32)):
+                wire_edges=jnp.zeros((), jnp.int32), sampler=None):
     """Advance one sync-equivalent WINDOW of k_v + k_u ticks.
 
     Each tick: sample one minibatch per client (only active clients
@@ -425,7 +494,12 @@ def async_round(runtime: AsyncRuntime, tick_fn, state, schedule, data,
         batch = jax.tree.map(lambda a: a[:, 0], b)
         topo = topology.to_push_sparse(schedule.at(t),
                                        self_weight=self_weight)
-        state, metrics = tick_fn(state, topo, batch)
+        # participation gate (docs/scale.md): sampled-out clients neither
+        # step nor fire this tick; mass fired at them waits in their
+        # persistent inbox, so the mass ledger is untouched
+        part = None if sampler is None \
+            else jnp.asarray(sampler.active_mask(t))
+        state, metrics = tick_fn(state, topo, batch, part)
         wire_edges = wire_edges + metrics["wire_edges"]
     return state, metrics, tick0 + runtime.k_total, wire_edges
 
@@ -444,7 +518,9 @@ def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
     depth = max(sim.mailbox_depth, sim.push_delay_max + 1)
     runtime, state = AsyncRuntime.build(core, stacked, profile, depth=depth)
     schedule = make_schedule(algo_name, sim)
-    tick_fn = jax.jit(lambda s, topo, b: runtime.tick(s, topo, b))
+    sampler = make_sampler(sim, profile=profile)
+    tick_fn = jax.jit(lambda s, topo, b, part: runtime.tick(
+        s, topo, b, participation=part))
     wire_rb = core.codec.row_bytes(runtime.layout.d_flat) \
         if core.codec is not None \
         else 4 * runtime.layout.d_flat + compress.MU_BYTES
@@ -461,7 +537,7 @@ def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
     for r in range(sim.rounds):
         state, metrics, tick, wire_edges = async_round(
             runtime, tick_fn, state, schedule, data, sim, k_run, tick,
-            wire_edges)
+            wire_edges, sampler=sampler)
         if (r + 1) % eval_every == 0 or r == sim.rounds - 1:
             acc, _ = evaluate(runtime.eval_params(state), data, model_cfg)
             history["round"].append(r + 1)

@@ -126,6 +126,21 @@ def lognormal(m: int, sigma: float = 0.5, push_delay_max: int = 0,
                          jnp.asarray(phase, jnp.float32))
 
 
+def time_to_available(profile: ClientProfile, t) -> np.ndarray:
+    """(m,) f32 ticks until each client is next reachable — 0 for clients
+    available at t.  Host-side numpy (the participation sampler ranks by
+    it between rounds, core/sampling.py); the same duty-cycle arithmetic
+    as `ClientProfile.available`, solved forward: a client whose phase sits
+    past the on-window waits out the rest of its period."""
+    period = np.asarray(profile.avail_period, np.float32)
+    duty = np.asarray(profile.avail_duty, np.float32)
+    phase = np.asarray(profile.avail_phase, np.float32)
+    p = np.maximum(period, 1.0)
+    pos = np.mod(float(t) + phase, p)
+    wait = np.where(pos < duty * p, 0.0, p - pos)
+    return np.where(period <= 0.0, 0.0, wait).astype(np.float32)
+
+
 KINDS = ("uniform", "tiered", "lognormal")
 
 

@@ -89,6 +89,11 @@ class AsyncRuntime:
             raise ValueError("mix_fn/mix_fn_flat overrides are sync "
                              "round-level features; the async runtime "
                              "mixes through the mailbox")
+        if isinstance(algo.codec_gamma, str):
+            raise ValueError(
+                "codec_gamma='auto' anneals per sync round from the "
+                "round's working set; the async tick has no such "
+                "boundary — use a static gamma")
         fstate, layout = algo.init_flat(stacked_params)
         m = fstate.mu.shape[0]
         validate_profile(profile, m)
@@ -118,7 +123,8 @@ class AsyncRuntime:
 
     # ------------------------------------------------------------------
     def tick(self, state: AsyncState, P: SparseTopology, batches,
-             edge_delay: Optional[jnp.ndarray] = None):
+             edge_delay: Optional[jnp.ndarray] = None,
+             participation: Optional[jnp.ndarray] = None):
         """One virtual time slice.  batches: leaves (m, B, ...) — one
         step's minibatch per client (only active clients consume theirs).
         P: the tick's directed mixing pattern (SparseTopology — per-edge
@@ -126,7 +132,13 @@ class AsyncRuntime:
         override of the profile-derived delays, values in [0, depth-1]
         (entry [i, j] delays the message from in-neighbor idx[i, j] to i;
         self-edges are forced to 0 — a client's retained share never rides
-        the wire).  Returns (state', metrics)."""
+        the wire).  participation: optional (m,) bool sampler gate
+        (core/sampling.py) AND-ed into the clock's availability mask: a
+        gated-off client neither steps nor fires, its mu freezes, and mass
+        fired AT it keeps landing in its persistent mailbox inbox (drained
+        when it next starts a round) — so Σmu + mailbox mass is conserved
+        under any participation pattern (docs/scale.md).  Returns
+        (state', metrics)."""
         if not isinstance(P, SparseTopology):
             raise ValueError("async ticks need a SparseTopology topology")
         algo, prof = self.algo, self.profile
@@ -139,6 +151,8 @@ class AsyncRuntime:
         # 2. wake: time arrived, available, and owns (or is owed, with the
         # owed part already delivered) positive push-sum mass
         time_ok = vclock.active_mask(state.clock, prof)
+        if participation is not None:
+            time_ok = time_ok & participation
         active = time_ok & ((state.mu + mail.inbox_mu) > 0.0)
         starters = active & (state.phase == 0)
         mail, got_f, got_mu = mbox.drain(mail, starters)

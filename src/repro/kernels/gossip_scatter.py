@@ -1,0 +1,155 @@
+"""Pallas TPU kernel: compact-working-set scatter into the resident buffer.
+
+The write-side twin of `gossip_gather`: partial participation
+(docs/scale.md) runs the round on the compact (n_active, d_flat) working
+set and this kernel lands the results back in the big (m, d_flat) resident
+buffer
+
+    U[rows[p], :] = X[p, :]                       (set mode)
+    U[rows[p], :] = U[rows[p], :] + X[p, :]       (accumulate mode, f32 sum)
+
+without ever materializing the dormant rows: U stays whole in HBM
+(`pl.ANY`) and is ALIASED to the output (`input_output_aliases`), so the
+dormant rows are never copied — the kernel's HBM traffic is O(n_active*d),
+not O(m*d).  Structure mirrors the gather:
+
+- the (n,) destination-row table rides in SMEM via scalar prefetch (plus a
+  scalar count so block_m padding rows never fire a write);
+- the grid is (n/block_m, d_panels); each step DMAs its panel's block_m
+  rows VMEM->HBM with all copies in flight before the first wait —
+  accumulate mode first gathers the current U rows the same way, sums in
+  f32, and scatters the result;
+- U is never padded (it is the aliased output); only X pads to the panel
+  quantum, and the last d-panel runs a statically-narrowed copy instead of
+  writing past d.
+
+Destination rows must be UNIQUE (the sampler emits a set): duplicate rows
+would race their in-flight DMAs.  `interpret=True` runs the same body on
+CPU — the validation path in this container (tests/test_sampling.py), not
+a fast path (the jnp oracle `ref.gossip_scatter_ref` is that).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .gossip_gather import BD, _default_block_m
+
+
+def _scatter_kernel(rows_ref, nreal_ref, x_ref, u_ref, out_ref, urows_ref,
+                    sems, *, accumulate: bool, rem: int):
+    # rows_ref, nreal_ref: scalar-prefetch (SMEM).  u_ref: the big buffer,
+    # aliased to out_ref — all reads and writes go through out_ref so the
+    # alias is the single memory.  x_ref: this panel's (block_m, block_d)
+    # VMEM block of the compact working set.
+    del u_ref
+    i = pl.program_id(0)
+    dt = pl.program_id(1)
+    nd = pl.num_programs(1)
+    bm, bd = x_ref.shape
+
+    def body(w):
+        # w: the STATIC width of this d-panel (bd, or the tail remainder)
+        if accumulate:
+            def gather(r):
+                return pltpu.make_async_copy(
+                    out_ref.at[rows_ref[i * bm + r], pl.ds(dt * bd, w)],
+                    urows_ref.at[r, pl.ds(0, w)], sems.at[r, 0])
+
+            for r in range(bm):
+                @pl.when(i * bm + r < nreal_ref[0])
+                def _(r=r):
+                    gather(r).start()
+            for r in range(bm):
+                @pl.when(i * bm + r < nreal_ref[0])
+                def _(r=r):
+                    gather(r).wait()
+            urows_ref[...] = (urows_ref[...].astype(jnp.float32)
+                              + x_ref[...].astype(jnp.float32)
+                              ).astype(urows_ref.dtype)
+            src = urows_ref
+        else:
+            src = x_ref
+
+        def put(r):
+            return pltpu.make_async_copy(
+                src.at[r, pl.ds(0, w)],
+                out_ref.at[rows_ref[i * bm + r], pl.ds(dt * bd, w)],
+                sems.at[r, 1])
+
+        for r in range(bm):
+            @pl.when(i * bm + r < nreal_ref[0])
+            def _(r=r):
+                put(r).start()
+        for r in range(bm):
+            @pl.when(i * bm + r < nreal_ref[0])
+            def _(r=r):
+                put(r).wait()
+
+    if rem and nd > 1:
+        @pl.when(dt < nd - 1)
+        def _full():
+            body(bd)
+
+        @pl.when(dt == nd - 1)
+        def _tail():
+            body(rem)
+    elif rem:
+        body(rem)       # single panel narrower than block_d: tail only
+    else:
+        body(bd)
+
+
+def gossip_scatter_pallas(rows: jnp.ndarray, X: jnp.ndarray, U: jnp.ndarray,
+                          accumulate: bool = False, block_d: int = BD,
+                          block_m: int | None = None,
+                          interpret: bool = False):
+    """U.at[rows].set(X)  (or += X in f32 when accumulate) — U aliased.
+
+    rows: (n,) int32 UNIQUE destination rows; X: (n, d) compact values
+    (cast to U.dtype on the way in); U: (m, d) resident buffer, returned
+    with only the addressed rows changed.  U is never padded or copied —
+    it is the aliased output; X pads to the (block_m, block_d) quantum
+    with zero rows that the scalar count keeps from firing any DMA.
+    """
+    n, d = X.shape
+    m, du = U.shape
+    assert du == d and rows.shape == (n,), (rows.shape, X.shape, U.shape)
+    if n == 0 or d == 0:
+        return U
+    X = X.astype(U.dtype)
+    block_m = _default_block_m(U.dtype) if block_m is None else block_m
+    np_ = -(-n // block_m) * block_m
+    nd = -(-d // block_d)
+    rem = d - (nd - 1) * block_d            # width of the last panel
+    rem = 0 if rem == block_d else rem      # aligned: no tail branch
+    if np_ != n:
+        rows = jnp.concatenate(
+            [rows, jnp.zeros((np_ - n,), rows.dtype)], axis=0)
+    dp = nd * block_d
+    if np_ != n or dp != d:
+        X = jnp.zeros((np_, dp), X.dtype).at[:n, :d].set(X)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,              # rows, nreal ride in SMEM
+        grid=(np_ // block_m, nd),
+        in_specs=[
+            pl.BlockSpec((block_m, block_d),
+                         lambda i, dt, rows_ref, nreal_ref: (i, dt)),
+            pl.BlockSpec(memory_space=pl.ANY),   # U whole, aliased output
+        ],
+        out_specs=pl.BlockSpec(memory_space=pl.ANY),
+        scratch_shapes=[pltpu.VMEM((block_m, block_d), U.dtype),
+                        pltpu.SemaphoreType.DMA((block_m, 2))],
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, accumulate=accumulate, rem=rem),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((m, d), U.dtype),
+        input_output_aliases={3: 0},        # U IS the output buffer
+        interpret=interpret,
+    )(rows.astype(jnp.int32), jnp.asarray([n], jnp.int32), X, U)

@@ -15,6 +15,7 @@ import jax
 from . import ref
 from .flash_attention import flash_attention_pallas
 from .gossip_gather import gossip_gather_pallas
+from .gossip_scatter import gossip_scatter_pallas
 from .pushsum_mix import pushsum_mix_pallas
 from .rglru import rglru_pallas
 from .topk_gather import topk_gather_pallas
@@ -48,6 +49,25 @@ def gossip_gather(idx, w, U, force: str = "auto", block_m: int | None = None):
                          "dispatched to the jnp oracle (force='pallas' to "
                          "run the kernel)")
     return ref.gossip_gather_ref(idx, w, U)
+
+
+@functools.partial(jax.jit, static_argnames=("accumulate", "force",
+                                             "block_m"))
+def gossip_scatter(rows, X, U, accumulate: bool = False,
+                   force: str = "auto", block_m: int | None = None):
+    """Write the compact (n_active, d) working set back into the resident
+    (m, d) buffer: U.at[rows].set(X), or += X accumulated in f32.  The
+    pallas path aliases U in place — dormant rows are never touched or
+    copied (docs/scale.md). force: auto|pallas|ref."""
+    if force == "pallas" or (force == "auto" and _on_tpu()):
+        return gossip_scatter_pallas(rows, X, U, accumulate=accumulate,
+                                     interpret=not _on_tpu(),
+                                     block_m=block_m)
+    if block_m is not None:
+        raise ValueError("block_m tunes the pallas kernel; this call "
+                         "dispatched to the jnp oracle (force='pallas' to "
+                         "run the kernel)")
+    return ref.gossip_scatter_ref(rows, X, U, accumulate)
 
 
 @functools.partial(jax.jit, static_argnames=("d", "force", "block_m"))

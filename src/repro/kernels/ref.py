@@ -23,6 +23,19 @@ def gossip_gather_ref(idx: jnp.ndarray, w: jnp.ndarray,
     return jnp.einsum("mk,mkd->md", w.astype(jnp.float32), G).astype(U.dtype)
 
 
+def gossip_scatter_ref(rows: jnp.ndarray, X: jnp.ndarray, U: jnp.ndarray,
+                       accumulate: bool = False) -> jnp.ndarray:
+    """U.at[rows].set(X) — or += X summed in f32 when accumulate — the
+    write-back of the compact partial-participation working set into the
+    resident buffer.  rows must be unique (duplicates race on the kernel
+    path; here at[].set would silently pick one winner)."""
+    Xc = X.astype(U.dtype)
+    if accumulate:
+        Xc = (jnp.take(U, rows, axis=0).astype(jnp.float32)
+              + Xc.astype(jnp.float32)).astype(U.dtype)
+    return U.at[rows].set(Xc)
+
+
 def topk_gather_ref(idx: jnp.ndarray, w: jnp.ndarray, values: jnp.ndarray,
                     cols: jnp.ndarray, d: int) -> jnp.ndarray:
     """Dense-decode oracle for the compressed gossip mix: scatter each

@@ -209,6 +209,35 @@ def flat_buffer_spec(mesh: Mesh, client_axes: Sequence[str], d_flat: int,
     return P(ca, fa)
 
 
+def sampled_buffer_spec(mesh: Mesh, client_axes: Sequence[str],
+                        n_active: int, d_flat: int,
+                        tp_axes: Sequence[str] = ()) -> P:
+    """PartitionSpec of the compact (n_active, d_flat) sampled working set
+    (docs/scale.md): the gathered active rows of the resident buffer and
+    everything that shares their layout (momentum rows, ef/ref rows, the
+    induced topology's neighbor table).
+
+    Rows go over the client axes only when n_active divides the client-axis
+    size evenly — an arbitrary sample fraction rarely does, and the compact
+    set is small by construction (that is the point of sampling), so the
+    fallback replicates rows rather than padding.  The flat dim follows the
+    resident buffer's TP rule unchanged, keeping gather/scatter between the
+    two layouts a pure row movement."""
+    ca = None
+    if client_axes:
+        c_size = 1
+        for a in client_axes:
+            c_size *= mesh.shape[a]
+        if c_size > 1 and n_active % c_size == 0:
+            ca = tuple(client_axes) if len(client_axes) > 1 \
+                else client_axes[0]
+    tp_size = _tp_size(mesh, tp_axes) if tp_axes else 1
+    fa = None
+    if tp_axes and tp_size > 1 and d_flat > 0 and d_flat % tp_size == 0:
+        fa = tuple(tp_axes) if len(tp_axes) > 1 else tp_axes[0]
+    return P(ca, fa)
+
+
 def batch_sharding(batch_tree, mesh: Mesh, batch_axes: Sequence[str]):
     """Shard the leading (client or batch) dim of every leaf."""
     ba = tuple(batch_axes) if len(batch_axes) > 1 else batch_axes[0]

@@ -460,7 +460,7 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
                      gossip: str = "matrix", bf16_grads: bool = False,
                      gossip_dtype: str = "",
                      schedule: "topology.TopologySchedule | None" = None,
-                     resident: bool = False):
+                     resident: bool = False, sample_frac: float = 1.0):
     """-> (train_step, in_shardings, out_shardings, arg_structs).
 
     train_step(state, P, batches) -> (state, metrics): one DFedPGP round —
@@ -474,7 +474,16 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
     directly (ppermute block mix / gossip.mix_flat).  `schedule` threads
     the experiment's TopologySchedule into the mix AND switches the P
     argument to the schedule's own SparseTopology form, so one object
-    decides who talks to whom in both regimes."""
+    decides who talks to whom in both regimes.
+
+    sample_frac < 1 (docs/scale.md) switches to the partial-participation
+    step: train_step(state, P_act, active, batches) gathers the active
+    rows, runs the round on the compact (n_active, d_flat) working set and
+    scatters back (algo.round_fn_sampled).  The caller draws `active` per
+    round from a core.sampling.ParticipationSampler and restricts the
+    schedule's round topology with TopologySchedule.induced(t, active).
+    Requires resident=True and a schedule; the ppermute mix addresses all
+    m shards so gossip="ppermute" cannot sample."""
     algo, mask, params_struct, flat_layout = build_train_algo(
         cfg, mesh, layout, k_u=k_u, k_v=k_v, gossip=gossip,
         bf16_grads=bf16_grads, gossip_dtype=gossip_dtype,
@@ -485,6 +494,55 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
     metrics_sh = {k: NamedSharding(mesh, P())
                   for k in ("loss_v", "loss_u", "mu_min", "mu_max")}
     P_struct, P_sh = _topology_specs(mesh, layout, schedule, specs["P"])
+
+    if not 0.0 < sample_frac <= 1.0:
+        raise ValueError(f"sample_frac={sample_frac}; want (0, 1]")
+    if sample_frac < 1.0:
+        if not resident:
+            raise ValueError("partial participation gathers/scatters the "
+                             "resident flat buffer; pass resident=True")
+        if schedule is None:
+            raise ValueError("partial participation restricts a "
+                             "TopologySchedule per round; pass schedule=")
+        if gossip == "ppermute":
+            raise ValueError("ppermute offsets address all m shards; the "
+                             "sampled round mixes the compact working set "
+                             "— use gossip='matrix'")
+        m = layout.n_clients
+        n_act = max(1, int(round(sample_frac * m)))
+        B = layout.per_client_batch
+        row_spec = sharding.sampled_buffer_spec(
+            mesh, layout.client_axes, n_act, flat_layout.d_flat,
+            layout.tp_axes)
+        ca_act = row_spec[0] if len(row_spec) else None
+
+        b_struct = {"v": batch_struct(cfg, shape, (n_act, k_v, B)),
+                    "u": batch_struct(cfg, shape, (n_act, k_u, B))}
+        b_sh = jax.tree.map(
+            lambda leaf: NamedSharding(
+                mesh, P(ca_act, *([None] * (leaf.ndim - 1)))), b_struct)
+        k_nb = schedule.at(0).idx.shape[1]
+        P_struct = topology.SparseTopology(
+            jax.ShapeDtypeStruct((n_act, k_nb), jnp.int32),
+            jax.ShapeDtypeStruct((n_act, k_nb), jnp.float32))
+        P_sh = jax.tree.map(
+            lambda _: NamedSharding(mesh, P(ca_act, None)), P_struct)
+        act_struct = jax.ShapeDtypeStruct((n_act,), jnp.int32)
+        act_sh = NamedSharding(mesh, P())   # gathers/scatter prefetch it
+        metrics_sh["n_active"] = NamedSharding(mesh, P())
+
+        state_struct = jax.eval_shape(
+            lambda p: algo.init_flat(p, flat_layout)[0], params_struct)
+        st_sh = flat_state_shardings(state_struct, mesh, layout)
+
+        def train_step(state, P_act, active, batches):
+            return algo.round_fn_sampled(state, P_act, active, batches,
+                                         flat_layout)
+
+        return (train_step,
+                (st_sh, P_sh, act_sh, b_sh),
+                (st_sh, metrics_sh),
+                (state_struct, P_struct, act_struct, b_struct))
 
     if resident:
         state_struct = jax.eval_shape(

@@ -86,6 +86,10 @@ def main(argv=None):
     ap.add_argument("--reduced", action="store_true",
                     help="use the reduced (smoke) variant of the arch")
     ap.add_argument("--tp", type=int, default=1)
+    ap.add_argument("--sample", type=float, default=1.0,
+                    help="participation fraction per round (docs/scale.md): "
+                         "< 1 draws a seeded uniform subset each round and "
+                         "runs the compact sampled step (needs --resident)")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -103,6 +107,15 @@ def main(argv=None):
         print("[train] note: ppermute needs the client mesh; "
               "falling back to matrix gossip")
         gossip = "matrix"
+    if not 0.0 < args.sample <= 1.0:
+        ap.error(f"--sample {args.sample}: want a fraction in (0, 1]")
+    sampled = args.sample < 1.0
+    if sampled and not args.resident:
+        ap.error("--sample < 1 gathers/scatters the resident flat buffer; "
+                 "add --resident")
+    if sampled and gossip == "ppermute":
+        ap.error("--sample < 1 mixes the compact working set; ppermute "
+                 "offsets address all m shards — use --gossip matrix")
     schedule = make_cli_schedule(args.topology, m, args.neighbors,
                                  args.seed, gossip)
 
@@ -117,7 +130,20 @@ def main(argv=None):
         jax.random.split(key, m))
     template = jax.tree.map(lambda x: x[0], stacked)
 
-    if args.resident:
+    sampler = None
+    if sampled:
+        from repro.core import sampling
+        sampler = sampling.ParticipationSampler("uniform", m, args.sample,
+                                                args.seed)
+    if sampled:
+        state, flat_layout = algo.init_flat(stacked, flat_layout)
+
+        @functools.partial(jax.jit, donate_argnums=(0,))
+        def round_fn(state, P_act, active, batches):
+            # compact working set: gather active rows, round, scatter back
+            return algo.round_fn_sampled(state, P_act, active, batches,
+                                         flat_layout)
+    elif args.resident:
         state, flat_layout = algo.init_flat(stacked, flat_layout)
 
         @functools.partial(jax.jit, donate_argnums=(0,))
@@ -132,10 +158,12 @@ def main(argv=None):
         def round_fn(state, P, batches):
             return algo.round_fn(state, P, batches)
 
+    n_lead = sampler.n_active if sampler is not None else m
     print(f"[train] {cfg.arch_id} family={cfg.family} clients={m} "
           f"params/client={partition.count_params(template):,} "
           f"shared={partition.count_params(template, mask, True):,} "
-          f"topology={schedule.kind} resident={args.resident}")
+          f"topology={schedule.kind} resident={args.resident}"
+          + (f" sample={args.sample} ({n_lead}/{m})" if sampled else ""))
 
     import contextlib
     ctx = mesh if mesh is not None else contextlib.nullcontext()
@@ -144,14 +172,20 @@ def main(argv=None):
             kr = jax.random.fold_in(key, r + 1)
             kb, _ = jax.random.split(kr)
             batches = {
-                "v": synth_lm_batch(kb, cfg, (m, args.k_v, args.batch),
+                "v": synth_lm_batch(kb, cfg, (n_lead, args.k_v, args.batch),
                                     args.seq),
                 "u": synth_lm_batch(jax.random.fold_in(kb, 7), cfg,
-                                    (m, args.k_u, args.batch), args.seq),
+                                    (n_lead, args.k_u, args.batch),
+                                    args.seq),
             }
-            P = schedule.at(r)
             t0 = time.time()
-            state, metrics = round_fn(state, P, batches)
+            if sampler is not None:
+                active = jnp.asarray(sampler.active_at(r))
+                P_act = topology.induced_subgraph(schedule.at(r), active,
+                                                  "row")
+                state, metrics = round_fn(state, P_act, active, batches)
+            else:
+                state, metrics = round_fn(state, schedule.at(r), batches)
             lu = float(metrics["loss_u"])
             print(f"[train] round {r:3d} loss_u={lu:.4f} "
                   f"loss_v={float(metrics['loss_v']):.4f} "
