@@ -1,0 +1,168 @@
+"""E10 — personalized serving benchmark: fused mixed-user batch vs the
+seed-era m-replica path (docs/serve.md).
+
+Builds an m=256-client CNN fleet, converts the trained resident buffer to
+a `ServingState` (anchor consensus), and times a mixed-user serve batch at
+B in {1, 64, 1024}:
+
+  fused — `serve.make_cnn_server`: trunk features ONCE for the whole
+          batch + the `ops.head_gather_matmul` per-request head (auto
+          dispatch, so the compiled kernel on TPU and the jnp oracle on
+          CPU — same entry point either way);
+  naive — `serve.make_naive_server`: the seed-era shape — stacked FULL
+          per-user models, every request gathers its user's whole tree
+          and runs its own forward.
+
+Per batch size the artifact records request throughput (rps at the median
+call) and tail latency (p50/p99 per-call wall ms) for the fused engine,
+best-of-N times for both engines, and their ratio (`speedup_fused` — the
+PR's headline number at B=1024).  Two parity flags ride on every row and
+are HARD gates in check_regression.py:
+
+  parity_serve_ok  — served logits are bit-for-bit eval_params_flat's
+                     per-user evaluation (the tier-1 form of this claim
+                     is tests/test_serve.py);
+  parity_kernel_ok — the Pallas head-gather kernel (interpret mode on
+                     CPU) matches the jnp oracle at an awkward shape.
+
+  PYTHONPATH=src python benchmarks/bench_serve.py [--quick] [--out F]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro import serve
+from repro.core import dfedpgp, partition
+from repro.kernels import ref
+from repro.kernels.head_gather import head_gather_matmul_pallas
+from repro.models import cnn
+from repro.optim import SGD
+
+ROOT = Path(__file__).resolve().parent.parent
+OUT = ROOT / "BENCH_serve.json"
+
+M = 256
+CFG = cnn.CNNConfig(image_size=8, n_classes=10)
+BATCHES = (1, 64, 1024)
+
+
+def _fleet(m: int = M, seed: int = 0):
+    """A consensused m-client fleet: the regime where anchor serving is
+    bit-for-bit any client's eval (post-training consensus)."""
+    def loss_fn(p, batch):
+        return cnn.loss_fn(p, batch, CFG)
+
+    template = cnn.init_params(jax.random.PRNGKey(0), CFG)
+    mask = partition.build_mask(template, partition.classifier_personal)
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=SGD(lr=0.1),
+                           opt_v=SGD(lr=0.1))
+    stacked = jax.vmap(lambda k: cnn.init_params(k, CFG))(
+        jax.random.split(jax.random.PRNGKey(seed), m))
+    state, layout = algo.init_flat(stacked)
+    kf, km = jax.random.split(jax.random.PRNGKey(seed + 100))
+    state = state._replace(
+        flat=jnp.tile(
+            (state.flat + 0.1 * jax.random.normal(kf, state.flat.shape))
+            [0:1], (m, 1)),
+        mu=jnp.full_like(state.mu, 1.37))
+    return algo, state, layout
+
+
+def _times_ms(fn, *args, iters: int = 30):
+    """Per-call wall times (ms) after one warmup: the full distribution,
+    so the artifact can report the median-call throughput AND the p99
+    tail (serving is a latency product, not only a throughput one)."""
+    jax.block_until_ready(fn(*args))
+    out = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        out.append((time.perf_counter() - t0) * 1e3)
+    return out
+
+
+def _parities(algo, state, layout, sstate):
+    # served == eval_params_flat, bit-for-bit (B=16 mixed users)
+    kx, ku = jax.random.split(jax.random.PRNGKey(3))
+    x = jax.random.normal(kx, (16, CFG.image_size, CFG.image_size, 3))
+    uid = jax.random.randint(ku, (16,), 0, M, jnp.int32)
+    got = serve.serve_logits(sstate, uid, x, CFG, force="ref")
+    models = algo.eval_params_flat(state, layout)
+    want = jax.vmap(lambda p: cnn.logits_fn(p, x, CFG))(models)[
+        uid, jnp.arange(16)]
+    serve_ok = bool(np.array_equal(np.asarray(got), np.asarray(want)))
+    serve_err = float(np.abs(np.asarray(got) - np.asarray(want)).max())
+
+    # pallas (interpret) vs the jnp oracle at an awkward shape
+    kh, kw, kb, ki = jax.random.split(jax.random.PRNGKey(5), 4)
+    H = jax.random.normal(kh, (5, 33))
+    W = jax.random.normal(kw, (64, 33, 130))
+    b = jax.random.normal(kb, (64, 130))
+    u = jax.random.randint(ki, (5,), 0, 64, jnp.int32)
+    kp = np.asarray(head_gather_matmul_pallas(u, H, W, b, interpret=True))
+    kr = np.asarray(ref.head_gather_matmul_ref(u, H, W, b))
+    kerr = float(np.abs(kp - kr).max())
+    return {"parity_serve_ok": serve_ok, "parity_serve_maxerr": serve_err,
+            "parity_kernel_ok": bool(kerr < 2e-5),
+            "parity_kernel_maxerr": kerr}
+
+
+def main(quick: bool = False, out: Path = OUT):
+    iters = 8 if quick else 30
+
+    algo, state, layout = _fleet()
+    sstate = serve.from_train_state(state, layout=layout, consensus=0)
+    models = algo.eval_params_flat(state, layout)
+    parity = _parities(algo, state, layout, sstate)
+
+    fused = serve.make_cnn_server(sstate, CFG)
+    naive = serve.make_naive_server(models, CFG)
+
+    rows = []
+    for B in BATCHES:
+        kx, ku = jax.random.split(jax.random.PRNGKey(B))
+        x = jax.random.normal(kx, (B, CFG.image_size, CFG.image_size, 3))
+        uid = jax.random.randint(ku, (B,), 0, M, jnp.int32)
+        tf = _times_ms(fused, uid, x, iters=iters)
+        tn = _times_ms(naive, uid, x, iters=iters)
+        p50, p99 = (float(np.percentile(tf, q)) for q in (50, 99))
+        row = {"batch": B, "m": M,
+               "rps_fused": round(B / (p50 / 1e3), 1),
+               "p50_ms": round(p50, 4), "p99_ms": round(p99, 4),
+               "t_fused_ms": round(min(tf), 4),
+               "t_naive_ms": round(min(tn), 4),
+               "speedup_fused": round(min(tn) / min(tf), 2)}
+        row.update(parity)
+        rows.append(row)
+        print(f"B={B:5d}  p50={row['p50_ms']:.3f}ms  "
+              f"p99={row['p99_ms']:.3f}ms  rps={row['rps_fused']:.0f}  "
+              f"fused={row['t_fused_ms']:.3f}ms  "
+              f"naive={row['t_naive_ms']:.3f}ms  "
+              f"speedup={row['speedup_fused']}x")
+
+    report = {"bench": "serve", "quick": quick,
+              "platform": platform.machine(),
+              "backend": jax.default_backend(),
+              "m": M, "iters": iters, "rows": rows}
+    Path(out).write_text(json.dumps(report, indent=1))
+    print(f"[bench_serve] wrote {out}  "
+          f"parity_serve_ok={parity['parity_serve_ok']} "
+          f"parity_kernel_ok={parity['parity_kernel_ok']}")
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="fewer timing iters (CI smoke; same grid)")
+    ap.add_argument("--out", type=Path, default=OUT)
+    args = ap.parse_args()
+    main(quick=args.quick, out=args.out)

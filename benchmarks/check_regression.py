@@ -43,6 +43,16 @@ With --fresh-scale, the E9 partial-participation artifact is gated too
   prevent.  (The quick grid is a subset of the full grid, so every quick
   cell has a baseline row.)
 
+With --fresh-serve, the E10 serving artifact is gated too (docs/serve.md):
+
+- SERVE PARITY is a hard gate: served logits must have been bit-for-bit
+  the per-user eval_params_flat evaluation in the fresh run (the tier-1
+  form is tests/test_serve.py), and the Pallas head-gather kernel
+  (interpret mode on CPU) must have matched the jnp oracle.
+- SPEEDUP is a ratio gate per batch size present in both runs, capped
+  like the gossip gate: a fused path that degenerates to per-request
+  forwards (speedup -> ~1x) fails; runner timing variance cannot.
+
 Exit code 0 = pass; 1 = regression, with a per-shape report either way.
 
   PYTHONPATH=src python benchmarks/bench_gossip.py --quick --out fresh.json
@@ -62,6 +72,7 @@ ROOT = Path(__file__).resolve().parent.parent
 BASELINE = ROOT / "BENCH_gossip.json"
 BASELINE_COMPRESS = ROOT / "BENCH_compress.json"
 BASELINE_SCALE = ROOT / "BENCH_scale.json"
+BASELINE_SERVE = ROOT / "BENCH_serve.json"
 
 RATIO_FLOOR = 0.7        # fresh speedup may drop to 70% of baseline
 # The baseline artifact is committed from one machine and CI runs on
@@ -218,6 +229,47 @@ def check_scale(baseline: dict, fresh: dict) -> list:
     return failures
 
 
+def by_serve_cell(report: dict) -> dict:
+    return {r["batch"]: r for r in report.get("rows", [])}
+
+
+def check_serve(baseline: dict, fresh: dict) -> list:
+    """E10 gate: serve + kernel parity hard-fail; the fused-vs-naive
+    speedup is ratio-gated per batch size (capped at FLOOR_CAP — the
+    B=1 cell is sub-millisecond and noisy; the signal is the fused path
+    degenerating to per-request forwards, not runner jitter)."""
+    failures = []
+    base_rows, fresh_rows = by_serve_cell(baseline), by_serve_cell(fresh)
+    if not fresh_rows:
+        failures.append("fresh serve report has no rows")
+    for batch, row in sorted(fresh_rows.items()):
+        tag = f"serve B={batch}"
+        if row.get("parity_serve_ok") is False:
+            failures.append(
+                f"{tag}: serve parity is False (maxerr "
+                f"{row.get('parity_serve_maxerr')}) — served logits "
+                f"diverged from the per-user eval_params_flat models")
+        if row.get("parity_kernel_ok") is False:
+            failures.append(
+                f"{tag}: head-gather kernel parity is False (maxerr "
+                f"{row.get('parity_kernel_maxerr')})")
+        base = base_rows.get(batch)
+        if base is None:
+            print(f"{tag}: no baseline cell, speedup "
+                  f"{row['speedup_fused']}x (unchecked)")
+            continue
+        floor = min(base["speedup_fused"] * RATIO_FLOOR, FLOOR_CAP)
+        ok = row["speedup_fused"] >= floor
+        print(f"{tag}: fused speedup {row['speedup_fused']}x vs baseline "
+              f"{base['speedup_fused']}x (floor {floor:.2f}x) "
+              f"{'OK' if ok else 'FAIL'}")
+        if not ok:
+            failures.append(
+                f"{tag}: fused speedup {row['speedup_fused']}x below "
+                f"{RATIO_FLOOR}x of baseline {base['speedup_fused']}x")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--baseline", type=Path, default=BASELINE,
@@ -235,6 +287,11 @@ def main(argv=None) -> int:
     ap.add_argument("--fresh-scale", type=Path, default=None,
                     help="artifact of a fresh bench_scale.py --quick run "
                          "(enables the E9 gate)")
+    ap.add_argument("--baseline-serve", type=Path, default=BASELINE_SERVE,
+                    help="committed BENCH_serve.json")
+    ap.add_argument("--fresh-serve", type=Path, default=None,
+                    help="artifact of a fresh bench_serve.py --quick run "
+                         "(enables the E10 gate)")
     args = ap.parse_args(argv)
 
     failures = check(load(args.baseline), load(args.fresh))
@@ -244,6 +301,9 @@ def main(argv=None) -> int:
     if args.fresh_scale is not None:
         failures += check_scale(load(args.baseline_scale),
                                 load(args.fresh_scale))
+    if args.fresh_serve is not None:
+        failures += check_serve(load(args.baseline_serve),
+                                load(args.fresh_serve))
     if failures:
         print("\nBENCH REGRESSION:")
         for f in failures:

@@ -7,6 +7,8 @@
   E6     bench_topology    Remark 2 / Lemma 3 (connectivity; beyond-paper)
   E7     bench_async       sync vs async virtual-time-to-accuracy (§Async)
   E8     bench_compress    accuracy vs cumulative wire bytes (§Compression)
+  E9     bench_scale       sampled resident round vs all-rows (§Scale)
+  E10    bench_serve       fused mixed-user serving vs m-replica (§Serve)
   G1     bench_gossip      sparse vs dense gossip-step wall time (§Perf)
   R1     roofline          three-term roofline from the dry-run artifacts
 
@@ -30,12 +32,14 @@ def main(argv=None):
 
     from . import (bench_ablation, bench_accuracy, bench_async,
                    bench_compress, bench_gossip, bench_hetero,
-                   bench_neighbors, bench_topology, roofline)
+                   bench_neighbors, bench_scale, bench_serve,
+                   bench_topology, roofline)
 
     suites = [("E1", bench_accuracy), ("E3", bench_hetero),
               ("E4", bench_ablation), ("E5", bench_neighbors),
               ("E6", bench_topology), ("E7", bench_async),
-              ("E8", bench_compress), ("G1", bench_gossip),
+              ("E8", bench_compress), ("E9", bench_scale),
+              ("E10", bench_serve), ("G1", bench_gossip),
               ("R1", roofline)]
     t0 = time.time()
     failures = 0

@@ -1,14 +1,27 @@
-"""Serving demo: batched autoregressive decode with per-client
-personalized models (the decode_32k shape at smoke scale).
+"""Serving demo: checkpoint in -> mixed-user batched decode out.
 
-Each of 2 clients serves its OWN personalized model (the paper's product);
-requests are batched per client, one token per step against a KV cache /
-recurrent state.  Works for every assigned architecture family.
+The PR 7 serving path (docs/serve.md) end-to-end on a dense LM:
 
-  PYTHONPATH=src python examples/serve_decode.py [--arch h2o-danube-1.8b]
+1. "train" an m-client DFedPGP fleet on the resident flat buffer and
+   save a Regime B checkpoint (`FlatDFedPGPState` npz);
+2. `serve.from_checkpoint` -> `ServingState`: the consensus trunk is
+   unraveled ONCE from the buffer; the personal leaves (final_norm +
+   lm_head under the paper's split) stay stacked (m, ...);
+3. decode a batch that MIXES users — every request carries its own uid.
+   The trunk backbone runs once per step for the whole batch against one
+   shared KV cache; only the tail personalizes per request: a gathered
+   final_norm row, then the fused `ops.head_gather_matmul` over the
+   stacked (m, d_model, vocab) lm_head block.
+
+This replaces the seed-era demo that kept m FULL model replicas and
+vmapped a whole forward per user — the shape `serve.serve_naive`
+preserves as the benchmark baseline (benchmarks/bench_serve.py).
+
+  PYTHONPATH=src python examples/serve_decode.py [--arch qwen2-0.5b]
 """
 import argparse
 import sys
+import tempfile
 import time
 from pathlib import Path
 
@@ -17,49 +30,101 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1] / "src"))
 import jax
 import jax.numpy as jnp
 
+from repro import serve
+from repro.checkpoint import save_train_state
 from repro.configs import get_reduced
-from repro.models import encdec, get_model
+from repro.core import dfedpgp, partition
+from repro.kernels import ops
+from repro.models import dense
+from repro.models import layers as L
+from repro.optim import SGD
+
+
+def decode_hidden(trunk, cache, tokens, pos, cfg):
+    """One decode step of the CONSENSUS trunk only: dense.decode_step
+    minus its personalized tail (final_norm + lm_head live in the
+    stacked personal block) -> (B, 1, d_model) hidden, new cache."""
+    x = trunk["embed"].astype(cfg.cdtype)[tokens]
+
+    def body(h, lp_and_cache):
+        lp, ck, cv = lp_and_cache
+        hn = L.rms_norm(h, lp["ln1"].astype(h.dtype), cfg.norm_eps)
+        a, ck, cv = L.attention_decode(lp["attn"], hn, pos, ck, cv, cfg,
+                                       window=cfg.window)
+        h = h + a
+        hn = L.rms_norm(h, lp["ln2"].astype(h.dtype), cfg.norm_eps)
+        h = h + L.swiglu(lp["mlp"], hn)
+        return h, (ck, cv)
+
+    x, (nk, nv) = jax.lax.scan(body, x, (trunk["layers"], cache["k"],
+                                         cache["v"]),
+                               unroll=cfg.scan_unroll)
+    return x, {"k": nk, "v": nv}
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="h2o-danube-1.8b")
+    ap.add_argument("--arch", default="qwen2-0.5b")
     ap.add_argument("--tokens", type=int, default=16)
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--clients", type=int, default=2)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--clients", type=int, default=4)
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch)
-    api = get_model(cfg)
+    if cfg.family != "dense":
+        ap.error(f"--arch {args.arch}: this demo decodes the dense family")
     m, B = args.clients, args.batch
-    params = jax.vmap(lambda k: api.init_params(k, cfg))(
-        jax.random.split(jax.random.PRNGKey(0), m))
-    cache = jax.vmap(lambda _: api.init_cache(cfg, B, 64))(jnp.arange(m))
-    if cfg.family == "encdec":
-        frames = jnp.zeros((m, B, cfg.n_frames, cfg.d_model))
-        cache = jax.vmap(lambda p, f, c: encdec.prefill_cross(p, f, cfg, c)
-                         )(params, frames, cache)
+
+    # -- a trained-like fleet, checkpointed ------------------------------
+    template = dense.init_params(jax.random.PRNGKey(0), cfg)
+    mask = partition.build_mask(template, partition.classifier_personal)
+    algo = dfedpgp.DFedPGP(
+        loss_fn=lambda p, b: dense.loss_fn(p, b, cfg), mask=mask,
+        opt_u=SGD(lr=0.1), opt_v=SGD(lr=0.1))
+    stacked = jax.vmap(lambda k: dense.init_params(k, cfg))(
+        jax.random.split(jax.random.PRNGKey(1), m))
+    state, layout = algo.init_flat(stacked)
+    # exactly-consensused buffer: anchor serving is then bit-for-bit any
+    # client's eval (a real run reaches this by gossiping; see docs)
+    state = state._replace(flat=jnp.tile(state.flat[0:1], (m, 1)),
+                           mu=jnp.full_like(state.mu, 1.0))
+
+    with tempfile.TemporaryDirectory() as ckpt_dir:
+        save_train_state(ckpt_dir, 42, state)
+        sstate, step = serve.from_checkpoint(ckpt_dir, state, layout=layout,
+                                             consensus=0)
+    print(f"[serve] {cfg.arch_id}: restored step {step}; "
+          f"{sstate.n_users()} users, trunk shared, personal="
+          f"{sorted(k for k, v in sstate.personal.items() if jax.tree.leaves(v))}")
+
+    # -- mixed-user batched greedy decode --------------------------------
+    uid = jnp.arange(B, dtype=jnp.int32) % m     # requests mix all users
+    fnorm = sstate.personal["final_norm"][uid]   # (B, d) gathered once
+    head_w = sstate.personal["lm_head"]          # (m, d, vocab) resident
+    head_b = jnp.zeros((m, cfg.vocab), jnp.float32)
+    cache = dense.init_cache(cfg, B, 64)         # ONE shared trunk cache
 
     @jax.jit
-    def serve_step(params, cache, toks, pos):
-        return jax.vmap(lambda p, c, t: api.decode_step(p, c, t, pos, cfg)
-                        )(params, cache, toks)
+    def serve_step(cache, toks, pos):
+        h, cache = decode_hidden(sstate.trunk, cache, toks, pos, cfg)
+        hp = L.rms_norm(h[:, 0, :], fnorm.astype(h.dtype), cfg.norm_eps)
+        logits = ops.head_gather_matmul(uid, hp, head_w, head_b)
+        return logits, cache
 
-    toks = jnp.zeros((m, B, 1), jnp.int32)
+    toks = jnp.zeros((B, 1), jnp.int32)
     out = []
     t0 = time.time()
     for t in range(args.tokens):
-        logits, cache = serve_step(params, cache, toks, jnp.int32(t))
-        toks = jnp.argmax(logits, -1).astype(jnp.int32)
-        out.append(toks[..., 0])
+        logits, cache = serve_step(cache, toks, jnp.int32(t))
+        toks = jnp.argmax(logits, -1, keepdims=True).astype(jnp.int32)
+        out.append(toks[:, 0])
     dt = time.time() - t0
-    seqs = jnp.stack(out, -1)   # (m, B, T)
-    print(f"[serve] {cfg.arch_id}: {m} personalized models x {B} requests, "
-          f"{args.tokens} tokens in {dt:.1f}s "
-          f"({m * B * args.tokens / dt:.0f} tok/s incl. compile)")
-    print("[serve] greedy continuations (client 0):")
-    for b in range(B):
-        print("   req", b, seqs[0, b].tolist())
+    seqs = jnp.stack(out, -1)                    # (B, T)
+    print(f"[serve] {B} mixed-user requests x {args.tokens} tokens in "
+          f"{dt:.1f}s ({B * args.tokens / dt:.0f} tok/s incl. compile); "
+          f"one trunk forward per step, per-request heads fused")
+    for b in range(min(B, 4)):
+        print(f"   req {b} (user {int(uid[b])})", seqs[b].tolist())
 
 
 if __name__ == "__main__":

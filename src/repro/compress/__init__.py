@@ -10,6 +10,7 @@ from .codecs import (
     QSGDCodec,
     RandKCodec,
     TopKCodec,
+    get_codec,
     index_dtype,
     make_codec,
 )
@@ -17,6 +18,6 @@ from .feedback import decode, encode_with_feedback, init_ef, init_ref, publish
 
 __all__ = [
     "KINDS", "MU_BYTES", "Codec", "IdentityCodec", "Payload", "QSGDCodec",
-    "RandKCodec", "TopKCodec", "index_dtype", "make_codec",
+    "RandKCodec", "TopKCodec", "get_codec", "index_dtype", "make_codec",
     "decode", "encode_with_feedback", "init_ef", "init_ref", "publish",
 ]

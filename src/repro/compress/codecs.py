@@ -250,15 +250,36 @@ class QSGDCodec:
 KINDS = ("identity", "topk", "randk", "qsgd")
 
 
+# string -> factory registry: every name resolver (AlgoSpec, SimConfig,
+# train.py, the serve/bench CLIs) funnels through this one table instead
+# of growing its own if-ladder (repro.spec)
+_REGISTRY = {
+    "identity": lambda ratio, bits, seed: IdentityCodec(seed=seed),
+    "topk": lambda ratio, bits, seed: TopKCodec(ratio=ratio, seed=seed),
+    "randk": lambda ratio, bits, seed: RandKCodec(ratio=ratio, seed=seed),
+    "qsgd": lambda ratio, bits, seed: QSGDCodec(bits=bits, seed=seed),
+}
+assert tuple(_REGISTRY) == KINDS
+
+
+def get_codec(kind, *, ratio: float = 1.0 / 16.0, bits: int = 4,
+              seed: int = 0):
+    """The codec registry: kind string -> codec instance; None passes
+    through (the uncompressed path), unknown kinds raise with the known
+    names."""
+    if kind is None:
+        return None
+    try:
+        factory = _REGISTRY[kind]
+    except KeyError:
+        raise ValueError(f"codec kind {kind!r}; known: {KINDS}") from None
+    return factory(ratio, bits, seed)
+
+
 def make_codec(kind: str, *, ratio: float = 1.0 / 16.0, bits: int = 4,
                seed: int = 0):
-    """One constructor for the SimConfig knob (fl/simulator.py)."""
-    if kind == "identity":
-        return IdentityCodec(seed=seed)
-    if kind == "topk":
-        return TopKCodec(ratio=ratio, seed=seed)
-    if kind == "randk":
-        return RandKCodec(ratio=ratio, seed=seed)
-    if kind == "qsgd":
-        return QSGDCodec(bits=bits, seed=seed)
-    raise ValueError(f"codec kind {kind!r}; known: {KINDS}")
+    """Historical constructor name; `get_codec` is the registry form
+    (kind must be a known string here — None is not a codec)."""
+    if kind is None:
+        raise ValueError(f"codec kind None; known: {KINDS}")
+    return get_codec(kind, ratio=ratio, bits=bits, seed=seed)

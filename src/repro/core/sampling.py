@@ -102,3 +102,23 @@ class ParticipationSampler:
         mask = np.zeros(self.m, bool)
         mask[self.active_at(t)] = True
         return mask
+
+
+def get_sampler(kind: str, m: int, frac: float = 1.0, seed: int = 0,
+                profile=None) -> Optional[ParticipationSampler]:
+    """The participation registry (repro.spec): kind string -> sampler, or
+    None for "full" (the all-clients path — callers skip the
+    gather/scatter round entirely).  A fractional frac with kind="full"
+    raises loudly: the full sampler acts on every client, so the knob
+    would silently run a different experiment than requested."""
+    if kind not in KINDS:
+        raise ValueError(f"participation kind {kind!r}; known: {KINDS}")
+    if kind == "full":
+        if frac != 1.0:
+            raise ValueError(
+                f"participation_frac={frac} needs participation='uniform' "
+                f"or 'trace' — the 'full' sampler acts on every client "
+                f"(drop the knob or pick a kind)")
+        return None
+    return ParticipationSampler(kind, m, frac, seed,
+                                profile if kind == "trace" else None)

@@ -501,6 +501,21 @@ class TopologySchedule:
         return tuple(offs)
 
 
+def get_schedule(kind: str, m: int, n: int = 0,
+                 seed: int = 0) -> TopologySchedule:
+    """The schedule registry (repro.spec): kind string -> the run's ONE
+    TopologySchedule.  The degree/seed knobs only parameterize the random
+    kinds; for the static kinds they are zeroed so two resolvers handed
+    the same (kind, m) always produce EQUAL schedule objects — the
+    one-topology invariant is an equality check away."""
+    if kind not in TopologySchedule.KINDS:
+        raise ValueError(
+            f"schedule kind {kind!r}; known: {TopologySchedule.KINDS}")
+    if kind in ("random", "undirected"):
+        return TopologySchedule(kind, m, n, seed)
+    return TopologySchedule(kind, m, 0, 0)
+
+
 # ---------------------------------------------------------------------------
 # diagnostics (numpy; used by tests and EXPERIMENTS.md)
 # ---------------------------------------------------------------------------

@@ -18,13 +18,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import compress
-from repro.core import baselines, dfedpgp, gossip, partition, sampling, \
-    topology
+from repro import spec as spec_mod
+from repro.core import baselines, dfedpgp, gossip, partition, topology
 from repro.data import ClientData, make_dataset, sample_batches
 from repro.hetero import profiles as hetero_profiles
 from repro.hetero.runtime import AsyncRuntime
 from repro.models import cnn
 from repro.optim import SGD
+from . import compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -106,13 +107,19 @@ class SimConfig:
     # (topology.staleness_self_weight) so receivers' push-sum weights
     # stop plateauing on mass stuck in slow links.  Async runtime only.
     stale_discount: bool = False
+    # ---- the new knob surface (repro.spec, PR 7) ----
+    # One AlgoSpec replaces the duplicated per-entrypoint knobs above
+    # (topology/gossip/resident/codec*/participation*).  When set, those
+    # legacy fields must stay at their defaults — resolve_spec raises on
+    # a conflict instead of letting two copies silently disagree.
+    spec: Optional[spec_mod.AlgoSpec] = None
 
 
 # algo name -> (constructor kind, context kind)
 ALGOS = ("local", "fedavg", "fedper", "fedrep", "fedbabu", "ditto",
          "dfedavgm", "dfedavgm-p", "osgp", "dispfl", "dfedpgp")
 CFL = ("fedavg", "fedper", "fedrep", "fedbabu", "ditto")
-UNDIRECTED = ("dfedavgm", "dfedavgm-p", "dispfl")
+UNDIRECTED = spec_mod.UNDIRECTED_ALGOS
 # push-sum methods the async runtime can drive (docs/hetero.md): osgp and
 # dfedavgm are expressed on the same engine as DFedPGP with an all-shared
 # partition (full-model gossip) and no personal phase — for dfedavgm the
@@ -122,16 +129,39 @@ UNDIRECTED = ("dfedavgm", "dfedavgm-p", "dispfl")
 ASYNC_ALGOS = ("dfedpgp", "osgp", "dfedavgm")
 
 
-def make_sim_codec(sim: SimConfig):
-    """The experiment's wire codec from the SimConfig knobs (None = the
-    uncompressed path)."""
-    if sim.codec is None:
-        return None
-    return compress.make_codec(sim.codec, ratio=sim.codec_ratio,
-                               bits=sim.codec_bits, seed=sim.seed)
+# legacy SimConfig fields the spec now owns (resolve_spec conflict check)
+_SPEC_KNOBS = ("topology", "n_neighbors", "gossip", "resident", "codec",
+               "codec_ratio", "codec_bits", "codec_gamma",
+               "participation", "participation_frac")
 
 
-def build_algorithm(name: str, loss_fn, mask, sim: SimConfig):
+def resolve_spec(algo_name: str, sim: SimConfig) -> spec_mod.AlgoSpec:
+    """The run's ONE AlgoSpec.  `SimConfig(spec=...)` wins, but only when
+    the legacy duplicated knobs sit at their defaults — a non-default
+    legacy knob next to an explicit spec is exactly the two-copies-
+    disagree bug the spec exists to kill, so it raises instead of
+    guessing.  Without a spec, the legacy fields funnel through the one
+    factory (compat.spec_from_sim), so they get the same validation."""
+    if sim.spec is not None:
+        defaults = {f.name: f.default for f in dataclasses.fields(SimConfig)}
+        clash = [k for k in _SPEC_KNOBS if getattr(sim, k) != defaults[k]]
+        if clash:
+            raise ValueError(
+                f"SimConfig(spec=...) conflicts with legacy knob(s) "
+                f"{clash}: the spec owns them now — drop the duplicated "
+                f"SimConfig fields (or drop spec= to keep the deprecated "
+                f"surface)")
+        if sim.spec.algo != algo_name:
+            raise ValueError(
+                f"spec.algo={sim.spec.algo!r} but the experiment runs "
+                f"{algo_name!r}; one spec describes one algorithm")
+        return sim.spec
+    return compat.spec_from_sim(sim, algo_name)
+
+
+def build_algorithm(name: str, loss_fn, mask, sim: SimConfig,
+                    spec: Optional[spec_mod.AlgoSpec] = None):
+    sp = spec if spec is not None else resolve_spec(name, sim)
     opt = SGD(lr=sim.lr, momentum=sim.momentum, weight_decay=sim.weight_decay)
     kw = dict(loss_fn=loss_fn, opt=opt, lr_decay=sim.lr_decay)
     if name == "local":
@@ -161,13 +191,14 @@ def build_algorithm(name: str, loss_fn, mask, sim: SimConfig):
         return dfedpgp.DFedPGP(
             loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
             k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay,
-            gossip=sim.gossip, codec=make_sim_codec(sim),
-            codec_gamma=sim.codec_gamma)
+            gossip=sp.gossip, codec=sp.make_codec(),
+            codec_gamma=sp.codec_gamma)
     raise ValueError(f"unknown algorithm {name!r}; known: {ALGOS}")
 
 
-def build_flat_core(name: str, loss_fn, mask,
-                    sim: SimConfig) -> dfedpgp.DFedPGP:
+def build_flat_core(name: str, loss_fn, mask, sim: SimConfig,
+                    spec: Optional[spec_mod.AlgoSpec] = None
+                    ) -> dfedpgp.DFedPGP:
     """The flat-engine push-sum core behind a DFL algorithm name.  dfedpgp
     keeps its partial partition and alternating phases; osgp/dfedavgm
     gossip the FULL model (all-shared mask, k_v = 0) — their sync
@@ -179,69 +210,49 @@ def build_flat_core(name: str, loss_fn, mask,
         raise ValueError(
             f"the flat push-sum engine drives {ASYNC_ALGOS}; {name!r} "
             f"has no flat-buffer core")
+    sp = spec if spec is not None else resolve_spec(name, sim)
     opt = SGD(lr=sim.lr, momentum=sim.momentum,
               weight_decay=sim.weight_decay)
-    codec = make_sim_codec(sim)
+    codec = sp.make_codec()
     if name == "dfedpgp":
         return dfedpgp.DFedPGP(
             loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
             k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay,
-            gossip="pallas" if sim.gossip == "pallas" else "sparse",
-            codec=codec, codec_gamma=sim.codec_gamma)
+            gossip="pallas" if sp.gossip == "pallas" else "sparse",
+            codec=codec, codec_gamma=sp.codec_gamma)
     all_shared = jax.tree.map(lambda _: True, mask)
     return dfedpgp.DFedPGP(
         loss_fn=loss_fn, mask=all_shared, opt_u=opt, opt_v=opt,
         k_v=0, k_u=sim.k_local + sim.k_personal, lr_decay=sim.lr_decay,
-        gossip="pallas" if sim.gossip == "pallas" else "sparse",
-        codec=codec, codec_gamma=sim.codec_gamma)
+        gossip="pallas" if sp.gossip == "pallas" else "sparse",
+        codec=codec, codec_gamma=sp.codec_gamma)
 
 
 # the async runtime's historical name for the same constructor
 build_async_core = build_flat_core
 
+# the deprecated knob-surface helpers (make_sim_codec / make_schedule /
+# make_sampler) moved to fl/compat.py; PEP 562 keeps the old
+# `simulator.make_schedule(...)` call sites importable for one release
+_DEPRECATED = ("make_sim_codec", "make_schedule", "make_sampler")
 
-def make_sampler(sim: SimConfig, profile=None):
-    """The experiment's ParticipationSampler from the SimConfig knobs —
-    None for full participation (the seed behavior).  "trace" needs the
-    availability profile; pass the async runtime's instance so both
-    regimes rank the same traces, or let the sync path build it from the
-    same hetero knobs (deterministic in sim.seed either way)."""
-    if sim.participation == "full":
-        if sim.participation_frac != 1.0:
-            raise ValueError(
-                f"participation_frac={sim.participation_frac} needs "
-                f"participation='uniform' or 'trace' — the 'full' sampler "
-                f"acts on every client (drop the knob or pick a kind)")
+
+def __getattr__(name):
+    if name in _DEPRECATED:
+        return getattr(compat, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def _trace_profile(sp: spec_mod.AlgoSpec, sim: SimConfig):
+    """The availability profile a trace-driven sampler ranks by — built
+    from the hetero knobs (those stay SimConfig fields: they describe the
+    simulated fleet, not the algorithm)."""
+    if sp.participation != "trace":
         return None
-    if sim.participation == "trace" and profile is None:
-        profile = hetero_profiles.make_profile(
-            sim.hetero, sim.m, spread=sim.speed_spread,
-            push_delay_max=sim.push_delay_max,
-            availability=sim.availability, seed=sim.seed)
-    return sampling.ParticipationSampler(
-        sim.participation, sim.m, sim.participation_frac, sim.seed,
-        profile if sim.participation == "trace" else None)
-
-
-def make_schedule(name: str, sim: SimConfig) -> topology.TopologySchedule:
-    """The experiment's mixing schedule — ONE TopologySchedule object
-    decides who talks to whom every round (the same object Regime B's
-    ppermute mix derives its permutation offsets from; the old per-round
-    if-ladder `make_mixing` is gone).  Deterministic in (sim.seed, kind)."""
-    if name in UNDIRECTED:
-        return topology.TopologySchedule.undirected(
-            sim.m, sim.n_neighbors, seed=sim.seed)
-    if sim.topology == "exponential":
-        return topology.TopologySchedule.exponential(sim.m)
-    if sim.topology == "ring":
-        return topology.TopologySchedule.ring(sim.m)
-    if sim.topology == "full":
-        return topology.TopologySchedule.full(sim.m)
-    if sim.topology != "random":
-        raise ValueError(f"topology {sim.topology!r}; known: "
-                         f"random | exponential | ring | full")
-    return topology.TopologySchedule.random(
-        sim.m, sim.n_neighbors, seed=sim.seed)
+    return hetero_profiles.make_profile(
+        sim.hetero, sim.m, spread=sim.speed_spread,
+        push_delay_max=sim.push_delay_max,
+        availability=sim.availability, seed=sim.seed)
 
 
 @functools.lru_cache(maxsize=None)
@@ -284,8 +295,12 @@ def run_experiment(algo_name: str, sim: SimConfig,
     stacked = jax.vmap(lambda k: cnn.init_params(k, model_cfg))(
         jax.random.split(k_init, sim.m))
 
-    if sim.gossip not in gossip.MODES:
-        raise ValueError(f"gossip mode {sim.gossip!r}; known: {gossip.MODES}")
+    sp = resolve_spec(algo_name, sim)
+    if sp.gossip not in gossip.MODES:
+        raise ValueError(
+            f"gossip mode {sp.gossip!r}: Regime A mixes via the matrix "
+            f"engines {gossip.MODES}; 'ppermute' is the sharded trainer's "
+            f"mix (launch.build_train_algo)")
     if sim.runtime not in ("sync", "async"):
         raise ValueError(f"runtime {sim.runtime!r}; known: sync | async")
     k_total = sim.k_local + sim.k_personal
@@ -302,47 +317,41 @@ def run_experiment(algo_name: str, sim: SimConfig,
         return async_experiment(algo_name, sim, model_cfg, data, loss_fn,
                                 mask, stacked, k_run,
                                 eval_every=eval_every, verbose=verbose,
-                                return_params=return_params)
-    codec = make_sim_codec(sim)
-    if codec is None and sim.codec_gamma != 1.0:
+                                return_params=return_params, spec=sp)
+    codec = sp.make_codec()
+    if codec is None and sp.codec_gamma != 1.0:
         raise ValueError(
-            f"codec_gamma={sim.codec_gamma} only applies to lossy "
-            f"codecs; set SimConfig.codec or drop the knob")
-    if codec is not None:
-        if algo_name not in ASYNC_ALGOS:
-            raise ValueError(
-                f"codec={sim.codec!r} rides the push-sum flat engines "
-                f"{ASYNC_ALGOS}; {algo_name!r} has no wire-payload "
-                f"boundary to compress")
-        if algo_name == "dfedpgp" and not sim.resident:
-            raise ValueError("wire codecs live on the resident flat "
-                             "buffer; resident=False has no payload "
-                             "boundary (drop the codec or re-enable "
-                             "resident)")
+            f"codec_gamma={sp.codec_gamma} only applies to lossy "
+            f"codecs; set the spec's codec or drop the knob")
+    if codec is not None and algo_name not in ASYNC_ALGOS:
+        raise ValueError(
+            f"codec={sp.codec!r} rides the push-sum flat engines "
+            f"{ASYNC_ALGOS}; {algo_name!r} has no wire-payload "
+            f"boundary to compress")
     # resident flat buffer: pack the shared part once, here; rounds then
     # mix the buffer in place (no per-round flatten — docs/gossip.md).
     # A wire codec routes osgp/dfedavgm through their flat-engine cores
     # too (the k_v = 0 specialization of Algorithm 1 — the same cores the
     # async runtime drives), because payloads are rows of the flat buffer.
-    use_flat = (algo_name == "dfedpgp" and sim.resident) or \
+    use_flat = (algo_name == "dfedpgp" and sp.resident) or \
         (codec is not None and algo_name in ("osgp", "dfedavgm"))
     if codec is not None and algo_name != "dfedpgp":
-        algo = build_flat_core(algo_name, loss_fn, mask, sim)
+        algo = build_flat_core(algo_name, loss_fn, mask, sim, spec=sp)
     else:
-        algo = build_algorithm(algo_name, loss_fn, mask, sim)
+        algo = build_algorithm(algo_name, loss_fn, mask, sim, spec=sp)
     is_pgp_engine = isinstance(algo, dfedpgp.DFedPGP)
-    if sim.gossip == "pallas" and not is_pgp_engine:
+    if sp.gossip == "pallas" and not is_pgp_engine:
         print(f"[simulator] note: gossip='pallas' applies to the "
               f"flat-buffer engine; {algo_name} gossips via the sparse "
               f"path")
     schedule = None if (algo_name in CFL or algo_name == "local") else \
-        make_schedule(algo_name, sim)
-    sampler = make_sampler(sim)
+        sp.schedule(sim.m)
+    sampler = sp.sampler(sim.m, _trace_profile(sp, sim))
     if sampler is not None and not use_flat:
         raise ValueError(
             f"partial participation gathers/scatters the resident flat "
             f"buffer (docs/scale.md); {algo_name!r} with "
-            f"resident={sim.resident} has no flat engine — use dfedpgp "
+            f"resident={sp.resident} has no flat engine — use dfedpgp "
             f"with resident=True (or a flat-core codec run)")
     if use_flat:
         state, layout = algo.init_flat(stacked)
@@ -411,7 +420,7 @@ def run_experiment(algo_name: str, sim: SimConfig,
             ctx = jnp.zeros(())  # unused
         else:
             topo = schedule.at(r)
-            ctx = topo.dense() if sim.gossip == "dense" else topo
+            ctx = topo.dense() if sp.gossip == "dense" else topo
             P_meter = topo
             if sampler is not None:
                 active = jnp.asarray(sampler.active_at(r))
@@ -506,19 +515,21 @@ def async_round(runtime: AsyncRuntime, tick_fn, state, schedule, data,
 
 def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
                      loss_fn, mask, stacked, k_run, eval_every: int = 10,
-                     verbose: bool = False, return_params: bool = False):
+                     verbose: bool = False, return_params: bool = False,
+                     spec: Optional[spec_mod.AlgoSpec] = None):
     """The `runtime="async"` leg of run_experiment: same data, model and
     protocol constants, but rounds become windows of ticks on the virtual
     clock and history carries virtual-time-to-accuracy."""
+    sp = spec if spec is not None else resolve_spec(algo_name, sim)
     profile = hetero_profiles.make_profile(
         sim.hetero, sim.m, spread=sim.speed_spread,
         push_delay_max=sim.push_delay_max, availability=sim.availability,
         seed=sim.seed)
-    core = build_flat_core(algo_name, loss_fn, mask, sim)
+    core = build_flat_core(algo_name, loss_fn, mask, sim, spec=sp)
     depth = max(sim.mailbox_depth, sim.push_delay_max + 1)
     runtime, state = AsyncRuntime.build(core, stacked, profile, depth=depth)
-    schedule = make_schedule(algo_name, sim)
-    sampler = make_sampler(sim, profile=profile)
+    schedule = sp.schedule(sim.m)
+    sampler = sp.sampler(sim.m, profile)
     tick_fn = jax.jit(lambda s, topo, b, part: runtime.tick(
         s, topo, b, participation=part))
     wire_rb = core.codec.row_bytes(runtime.layout.d_flat) \

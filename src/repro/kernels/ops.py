@@ -16,6 +16,7 @@ from . import ref
 from .flash_attention import flash_attention_pallas
 from .gossip_gather import gossip_gather_pallas
 from .gossip_scatter import gossip_scatter_pallas
+from .head_gather import head_gather_matmul_pallas
 from .pushsum_mix import pushsum_mix_pallas
 from .rglru import rglru_pallas
 from .topk_gather import topk_gather_pallas
@@ -84,6 +85,28 @@ def topk_gather(idx, w, values, cols, d: int, force: str = "auto",
                          "dispatched to the jnp oracle (force='pallas' to "
                          "run the kernel)")
     return ref.topk_gather_ref(idx, w, values, cols, d)
+
+
+@functools.partial(jax.jit, static_argnames=("force", "block_b"))
+def head_gather_matmul(uid, H, W, b, force: str = "auto",
+                       block_b: int | None = None):
+    """out[r] = H[r] @ W[uid[r]] + b[uid[r]] — the fused per-user
+    classifier head of the serve path (docs/serve.md): trunk features H
+    computed once for a mixed-user batch, per-request (d, n) classifier
+    slabs gathered from the stacked personal block.  Always returns f32
+    (the accumulate dtype).  force: auto|pallas|ref.  block_b tunes the
+    kernel's request-panel height and is only meaningful on the pallas
+    path — a ref dispatch with block_b set raises instead of silently
+    ignoring the knob."""
+    if force == "pallas" or (force == "auto" and _on_tpu()):
+        return head_gather_matmul_pallas(uid, H, W, b,
+                                         interpret=not _on_tpu(),
+                                         block_b=block_b)
+    if block_b is not None:
+        raise ValueError("block_b tunes the pallas kernel; this call "
+                         "dispatched to the jnp oracle (force='pallas' to "
+                         "run the kernel)")
+    return ref.head_gather_matmul_ref(uid, H, W, b)
 
 
 def flash_attention(q, k, v, *, window: int = 0, scale=None,

@@ -50,6 +50,18 @@ def topk_gather_ref(idx: jnp.ndarray, w: jnp.ndarray, values: jnp.ndarray,
     return gossip_gather_ref(idx, w, dec).astype(values.dtype)
 
 
+def head_gather_matmul_ref(uid: jnp.ndarray, H: jnp.ndarray,
+                           W: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """out[r] = H[r] @ W[uid[r]] + b[uid[r]] — the personalized-head serve
+    oracle (f32 out).  The batched einsum over the gathered (B, d, n)
+    weights is bit-for-bit the per-user `h @ W_u + b_u` a single client's
+    model computes (tests/test_serve.py pins this), which is what lets the
+    serve path promise exact agreement with eval_params_flat."""
+    Wg = jnp.take(W, uid, axis=0).astype(jnp.float32)        # (B, d, n)
+    bg = jnp.take(b, uid, axis=0).astype(jnp.float32)        # (B, n)
+    return jnp.einsum("bd,bdn->bn", H.astype(jnp.float32), Wg) + bg
+
+
 def flash_attention_ref(q, k, v, *, window: int = 0, scale=None):
     """Causal (optionally sliding-window) GQA attention, full-matrix math."""
     B, S, H, hd = q.shape

@@ -21,6 +21,7 @@ Layouts
 """
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple, Tuple
 
 import jax
@@ -374,11 +375,45 @@ def make_ppermute_mix_flat(mesh: Mesh, layout: Layout, d_flat: int,
 # ---------------------------------------------------------------------------
 # step builders
 # ---------------------------------------------------------------------------
+def _resolve_regime_b(layout: Layout, spec, gossip, schedule, resident,
+                      caller: str):
+    """One (gossip, schedule, resident, sample_frac) tuple for the Regime B
+    builders.  `spec` (a repro.spec.AlgoSpec) is the new surface: the
+    schedule comes from `spec.schedule(layout.n_clients)` and the gossip /
+    resident / participation knobs from its fields — one object, no
+    duplicated kwargs.  The legacy kwargs keep working for one release;
+    passing BOTH a spec and a non-default legacy duplicate raises (the
+    silent-disagreement bug the spec kills), and legacy non-default uses
+    emit a DeprecationWarning pointing at the factory."""
+    if spec is None:
+        if gossip != "matrix" or resident or schedule is not None:
+            warnings.warn(
+                f"{caller}(gossip=/schedule=/resident=) kwargs are "
+                f"deprecated: build an AlgoSpec "
+                f"(repro.spec.make_algo_spec) and pass spec=",
+                DeprecationWarning, stacklevel=3)
+        return gossip, schedule, resident, 1.0
+    clash = [k for k, v, dflt in (("gossip", gossip, "matrix"),
+                                  ("schedule", schedule, None),
+                                  ("resident", resident, False))
+             if v != dflt]
+    if clash:
+        raise ValueError(
+            f"{caller}(spec=...) conflicts with legacy kwarg(s) {clash}: "
+            f"the spec owns them now — drop the duplicates")
+    # the spec's engine names map onto Regime B's two mixes: "ppermute"
+    # is the shard_map permutation mix; every matrix engine (dense /
+    # sparse / pallas) is the mixing-matrix contraction ("matrix")
+    b_gossip = "ppermute" if spec.gossip == "ppermute" else "matrix"
+    return (b_gossip, spec.schedule(layout.n_clients), spec.resident,
+            spec.participation_frac)
+
+
 def build_train_algo(cfg: ModelConfig, mesh: "Mesh | None", layout: Layout,
                      k_u: int = 1, k_v: int = 1, gossip: str = "matrix",
                      bf16_grads: bool = False, gossip_dtype: str = "",
                      schedule: "topology.TopologySchedule | None" = None,
-                     resident: bool = False, lr: float = 0.1):
+                     resident: bool = False, lr: float = 0.1, spec=None):
     """-> (algo, mask, params_struct, flat_layout).
 
     The DFedPGP instance behind a Regime B train round, shared by
@@ -388,7 +423,14 @@ def build_train_algo(cfg: ModelConfig, mesh: "Mesh | None", layout: Layout,
     one-topology invariant of docs/gossip.md.  `schedule` must match the
     layout's client count; `resident=True` builds the flat-buffer form
     (mix_fn_flat / grad_hook_flat; flat_layout is the buffer's static
-    wire layout, None otherwise)."""
+    wire layout, None otherwise).
+
+    `spec` (repro.spec.AlgoSpec) is the new knob surface: it supplies
+    gossip / schedule / resident (and, via build_train_step, sample_frac)
+    from the ONE validated object both regimes consume; the individual
+    kwargs are the deprecated legacy surface (one release)."""
+    gossip, schedule, resident, _ = _resolve_regime_b(
+        layout, spec, gossip, schedule, resident, "build_train_algo")
     api = get_model(cfg)
 
     def loss_fn(p, batch):
@@ -460,7 +502,8 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
                      gossip: str = "matrix", bf16_grads: bool = False,
                      gossip_dtype: str = "",
                      schedule: "topology.TopologySchedule | None" = None,
-                     resident: bool = False, sample_frac: float = 1.0):
+                     resident: bool = False, sample_frac: float = 1.0,
+                     spec=None):
     """-> (train_step, in_shardings, out_shardings, arg_structs).
 
     train_step(state, P, batches) -> (state, metrics): one DFedPGP round —
@@ -483,11 +526,24 @@ def build_train_step(cfg: ModelConfig, mesh: Mesh, layout: Layout,
     round from a core.sampling.ParticipationSampler and restricts the
     schedule's round topology with TopologySchedule.induced(t, active).
     Requires resident=True and a schedule; the ppermute mix addresses all
-    m shards so gossip="ppermute" cannot sample."""
+    m shards so gossip="ppermute" cannot sample.
+
+    `spec` (repro.spec.AlgoSpec) supplies gossip / schedule / resident /
+    sample_frac from the one validated object (see build_train_algo)."""
     algo, mask, params_struct, flat_layout = build_train_algo(
         cfg, mesh, layout, k_u=k_u, k_v=k_v, gossip=gossip,
         bf16_grads=bf16_grads, gossip_dtype=gossip_dtype,
-        schedule=schedule, resident=resident)
+        schedule=schedule, resident=resident, spec=spec)
+    if spec is not None:
+        if sample_frac != 1.0:
+            raise ValueError(
+                "build_train_step(spec=...) conflicts with legacy kwarg "
+                "['sample_frac']: the spec owns participation now — drop "
+                "the duplicate")
+        gossip = "ppermute" if spec.gossip == "ppermute" else "matrix"
+        schedule = spec.schedule(layout.n_clients)
+        resident = spec.resident
+        sample_frac = spec.participation_frac
 
     specs = input_specs(cfg, shape, layout, k_u=k_u, k_v=k_v)
     b_sh = batch_specs(specs["batches"], mesh, layout, n_lead=2)

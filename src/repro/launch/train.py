@@ -32,6 +32,7 @@ from repro.core import partition, topology
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
+from repro.spec import make_algo_spec
 
 
 def synth_lm_batch(key, cfg, lead, seq):
@@ -49,16 +50,18 @@ def synth_lm_batch(key, cfg, lead, seq):
     return batch
 
 
-def make_cli_schedule(kind: str, m: int, n_neighbors: int,
-                      seed: int, gossip: str) -> topology.TopologySchedule:
-    """The run's ONE mixing schedule.  Default: the one-peer exponential
-    graph for ppermute (the only kind that IS a permutation mix), the
-    paper's n-random-in-neighbors graph for the matrix contraction."""
-    if not kind:
-        kind = "exponential" if gossip == "ppermute" else "random"
-    if kind in ("random", "undirected"):
-        return topology.TopologySchedule(kind, m, n_neighbors, seed)
-    return topology.TopologySchedule(kind, m, 0, seed)
+def make_cli_spec(args, gossip: str):
+    """The run's ONE AlgoSpec from the CLI flags (repro.spec).  Topology
+    default: the one-peer exponential graph for ppermute (the only kind
+    that IS a permutation mix), the paper's n-random-in-neighbors graph
+    for the matrix contraction."""
+    kind = args.topology or \
+        ("exponential" if gossip == "ppermute" else "random")
+    return make_algo_spec(
+        "dfedpgp", topology=kind, n_neighbors=args.neighbors,
+        seed=args.seed, gossip=gossip, resident=args.resident,
+        participation="uniform" if args.sample < 1.0 else "full",
+        participation_frac=args.sample)
 
 
 def main(argv=None):
@@ -116,25 +119,23 @@ def main(argv=None):
     if sampled and gossip == "ppermute":
         ap.error("--sample < 1 mixes the compact working set; ppermute "
                  "offsets address all m shards — use --gossip matrix")
-    schedule = make_cli_schedule(args.topology, m, args.neighbors,
-                                 args.seed, gossip)
+    spec = make_cli_spec(args, gossip)
+    # the spec is the run's one knob object: the schedule the round loop
+    # mixes over and the sampler it draws from resolve from the SAME spec
+    # the builder consumes (deterministic in its fields, so the builder's
+    # internal schedule and this one are equal objects)
+    schedule = spec.schedule(m)
+    sampler = spec.sampler(m)
 
     api = get_model(cfg)
     layout = steps.Layout(("data",), (), ("model",), (), m, args.batch)
     algo, mask, _, flat_layout = steps.build_train_algo(
-        cfg, mesh, layout, k_u=args.k_u, k_v=args.k_v, gossip=gossip,
-        schedule=schedule, resident=args.resident, lr=0.02)
+        cfg, mesh, layout, k_u=args.k_u, k_v=args.k_v, spec=spec, lr=0.02)
 
     key = jax.random.PRNGKey(0)
     stacked = jax.vmap(lambda k: api.init_params(k, cfg))(
         jax.random.split(key, m))
     template = jax.tree.map(lambda x: x[0], stacked)
-
-    sampler = None
-    if sampled:
-        from repro.core import sampling
-        sampler = sampling.ParticipationSampler("uniform", m, args.sample,
-                                                args.seed)
     if sampled:
         state, flat_layout = algo.init_flat(stacked, flat_layout)
 

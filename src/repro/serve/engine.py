@@ -1,0 +1,68 @@
+"""Batched personalized inference over a ServingState (docs/serve.md).
+
+A serve batch mixes many users: requests r = 0..B-1 carry a user id
+uid[r] and an input x[r].  The engine computes trunk features ONCE for
+the whole batch (the consensus shared representation is one model), then
+applies each request's personal classifier via the fused
+`ops.head_gather_matmul` kernel — per-request (d, n) slabs gathered from
+the stacked (m, d, n) personal block, f32 accumulate.
+
+The naive baseline (`serve_naive`) is the seed-era shape of this path:
+every request evaluates its user's FULL model — m-replica params, one
+whole forward per request, the per-user vmap gather the fused path
+deletes.  `benchmarks/bench_serve.py` (E10) measures the gap.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops
+from repro.models import cnn
+
+
+def serve_logits(sstate, uid, x, model_cfg: cnn.CNNConfig,
+                 force: str = "auto", block_b: int | None = None):
+    """Mixed-user batched CNN serve: (B,) uid + (B, H, W, C) x -> (B, n)
+    f32 logits.  Features run once through the consensus trunk; the
+    per-request head is the fused gather+matmul.  With the exact-
+    consensus trunk (anchor mode) the result is bit-for-bit
+    eval_params_flat's per-user evaluation (tests/test_serve.py)."""
+    h = cnn.features(sstate.trunk, x, model_cfg)
+    head = sstate.personal["classifier"]
+    return ops.head_gather_matmul(uid, h, head["w"], head["b"],
+                                  force=force, block_b=block_b)
+
+
+def make_cnn_server(sstate, model_cfg: cnn.CNNConfig,
+                    force: str = "auto", block_b: int | None = None):
+    """-> jitted serve(uid, x) -> (B, n) f32 logits closure over the
+    resident serving state (the state rides as a captured constant, so
+    repeated calls at one batch shape reuse one trace)."""
+    @jax.jit
+    def serve(uid, x):
+        return serve_logits(sstate, uid, x, model_cfg,
+                            force=force, block_b=block_b)
+
+    return serve
+
+
+def serve_naive(models, uid, x, model_cfg: cnn.CNNConfig):
+    """Seed-era baseline: stacked (m, ...) FULL personalized models kept
+    resident; every request gathers its user's whole parameter tree and
+    runs its own forward (per-user vmap) — no feature sharing, no fused
+    head.  The E10 bench's comparison point."""
+    def one(u, xr):
+        p = jax.tree.map(lambda a: a[u], models)
+        return cnn.logits_fn(p, xr[None], model_cfg)[0]
+
+    return jax.vmap(one)(uid, x)
+
+
+def make_naive_server(models, model_cfg: cnn.CNNConfig):
+    """Jitted form of `serve_naive` (the bench times both engines through
+    one dispatch boundary)."""
+    return jax.jit(functools.partial(serve_naive, models,
+                                     model_cfg=model_cfg))

@@ -1,0 +1,118 @@
+"""ServingState: the trained buffer, re-packaged for inference.
+
+Training's product (docs/serve.md) is m personalized models sharing one
+consensus representation: the de-biased shared part z = u / mu (push-sum
+semantics) plus each client's private classifier.  At serve time that
+factorization is the whole point — the trunk is ONE model evaluated once
+per mixed-user batch, and only the tiny personal head differs per request
+— so the serving state stores exactly those two pieces:
+
+- ``trunk``: the consensus shared subtree, unraveled ONCE from the
+  (m, d_flat) resident buffer via `FlatLayout` (personal slots are None,
+  as produced by `partition.split`);
+- ``personal``: the stacked (m, ...) personal leaves kept resident — the
+  per-user classifier block the fused `head_gather_matmul` kernel gathers
+  request rows from.
+
+Converters accept every trained form: the resident `FlatDFedPGPState`,
+the tree-form `DFedPGPState`, and a Regime B checkpoint directory
+(reusing `checkpoint.restore_train_state`).  All three yield bit-for-bit
+identical serving states for the same underlying values
+(tests/test_serve.py) — the flat<->tree packing is pure reshape/concat.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import restore_train_state
+from repro.core import gossip, partition
+from repro.core.dfedpgp import DFedPGPState, FlatDFedPGPState
+
+CONSENSUS_MODES = ("mass", "mean")
+
+
+class ServingState(NamedTuple):
+    """Inference-side state: one consensus trunk + m resident heads."""
+    trunk: Any          # shared subtree, de-biased; None at personal slots
+    personal: Any       # stacked (m, ...) personal leaves; None at shared
+
+    def n_users(self) -> int:
+        return jax.tree.leaves(self.personal)[0].shape[0]
+
+    def user_model(self, i):
+        """The full personalized model of user i (diagnostics / parity
+        tests — the serve path never materializes this)."""
+        head = jax.tree.map(lambda a: a[i], self.personal)
+        return partition.merge(self.trunk, head)
+
+
+def _consensus_row(flat: jnp.ndarray, mu: jnp.ndarray, consensus):
+    """One (d_flat,) de-biased consensus row from the resident buffer.
+
+    - int i — anchor on client i: EXACTLY the expression eval_params_flat
+      computes for that client (z = flat / mu[:, None].astype(dtype),
+      row i), so served logits are bit-for-bit that client's evaluation.
+      The right mode once the run has actually consensused (all rows
+      equal) — and the mode the exactness tests pin.
+    - "mass" — (sum_i u_i) / (sum_i mu_i) in f32: the push-sum consensus
+      estimate (total mass over total weight; mass conservation makes
+      this invariant under further exact mixing).
+    - "mean" — mean_i (u_i / mu_i): the plain average of the per-client
+      de-biased views.
+    """
+    if isinstance(consensus, (int, jnp.integer)) \
+            and not isinstance(consensus, bool):
+        z = flat / mu[:, None].astype(flat.dtype)
+        return z[consensus]
+    if consensus == "mass":
+        num = jnp.sum(flat.astype(jnp.float32), axis=0)
+        return (num / jnp.sum(mu)).astype(flat.dtype)
+    if consensus == "mean":
+        z = flat.astype(jnp.float32) / mu[:, None]
+        return jnp.mean(z, axis=0).astype(flat.dtype)
+    raise ValueError(f"consensus {consensus!r}; known: {CONSENSUS_MODES} "
+                     f"or an int client index (anchor)")
+
+
+def from_train_state(state, *, mask=None, layout=None,
+                     consensus="mass") -> ServingState:
+    """Trained state -> ServingState.
+
+    state: a FlatDFedPGPState (pass the run's `layout`) or a DFedPGPState
+    (pass the partition `mask`; the layout is built from the params).  The
+    tree form is packed through the SAME flatten_shared wire layout the
+    resident path lives on, so both forms produce identical bits.
+    """
+    if isinstance(state, FlatDFedPGPState):
+        if layout is None:
+            raise ValueError("FlatDFedPGPState needs the run's FlatLayout "
+                             "(the buffer's static wire layout)")
+        flat, mu, personal = state.flat, state.mu, state.personal
+    elif isinstance(state, DFedPGPState):
+        if mask is None:
+            raise ValueError("tree-form DFedPGPState needs the partition "
+                             "mask (shared/personal split)")
+        fcs, layout = gossip.FlatClientState.create(state.params, mask,
+                                                    layout)
+        flat, mu, personal = fcs.flat, state.mu, fcs.personal
+    else:
+        raise TypeError(f"expected FlatDFedPGPState or DFedPGPState, got "
+                        f"{type(state).__name__}")
+    trunk = layout.unravel_row(_consensus_row(flat, mu, consensus))
+    return ServingState(trunk=trunk, personal=personal)
+
+
+def from_checkpoint(ckpt_dir: str, template, *, mask=None, layout=None,
+                    consensus="mass"):
+    """-> (ServingState, step).  Restores the latest Regime B checkpoint
+    in `ckpt_dir` against `template` (a FlatDFedPGPState or DFedPGPState
+    structure — checkpoint.restore_train_state is template-driven) and
+    converts.  bf16 leaves round-trip bit-exactly (uint16 views)."""
+    state, step = restore_train_state(ckpt_dir, template)
+    if state is None:
+        raise FileNotFoundError(f"no step_*.npz checkpoint in {ckpt_dir}")
+    return from_train_state(state, mask=mask, layout=layout,
+                            consensus=consensus), step

@@ -1,0 +1,135 @@
+"""AlgoSpec: ONE description of a training algorithm's knobs, consumed by
+every entrypoint.
+
+Before this module the same ~10 knobs — topology kind/degree/seed, gossip
+engine, wire codec (+ratio/bits/gamma), participation kind/frac, resident
+buffer — were duplicated three times: `fl.simulator.SimConfig` fields,
+`launch.build_train_algo` kwargs, and `launch.train` argparse flags.
+Three copies can silently disagree (a SimConfig seeded one topology while
+the builder fell back to another).  Now there is one frozen dataclass,
+built by one factory (`make_algo_spec`), and:
+
+- Regime A takes it as `SimConfig(spec=...)`;
+- Regime B takes it as `build_train_algo(..., spec=...)` /
+  `build_train_step(..., spec=...)`;
+- `launch/train.py` builds one from its flags and passes it down;
+- name->object resolution goes through the string registries
+  (`topology.get_schedule`, `sampling.get_sampler`, `compress.get_codec`)
+  instead of per-entrypoint if-ladders.
+
+The old knob surfaces keep working for one release with a
+DeprecationWarning (fl/compat.py holds the deprecated helpers; a ruff
+TID251 lint gate bans them inside src/).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional
+
+from repro import compress
+from repro.core import sampling, topology
+
+GOSSIP_MODES = ("dense", "sparse", "pallas", "ppermute")
+# algorithms whose mixing must be symmetric (no push-sum de-bias):
+# mirrors fl.simulator.UNDIRECTED — the schedule resolver substitutes the
+# undirected kind for them regardless of the requested topology
+UNDIRECTED_ALGOS = ("dfedavgm", "dfedavgm-p", "dispfl")
+
+
+@dataclasses.dataclass(frozen=True)
+class AlgoSpec:
+    """The one place an experiment's algorithm knobs live.  Frozen and
+    hashable; invalid combinations refuse at construction (the loud-knob
+    rule), not deep inside a round loop."""
+    algo: str = "dfedpgp"
+    topology: str = "random"        # schedule kind (topology.get_schedule)
+    n_neighbors: int = 10           # in-degree of the random kinds
+    seed: int = 0                   # schedule / codec / sampler seed
+    gossip: str = "sparse"          # dense | sparse | pallas | ppermute
+    resident: bool = True           # shared part lives in the flat buffer
+    codec: Optional[str] = None     # wire codec kind (compress.get_codec)
+    codec_ratio: float = 1.0 / 16.0
+    codec_bits: int = 4
+    codec_gamma: Any = 1.0          # float in (0, 1], or "auto"
+    participation: str = "full"     # full | uniform | trace
+    participation_frac: float = 1.0
+    block_m: Optional[int] = None   # pallas DMA-panel knob (pallas only)
+
+    def __post_init__(self):
+        if self.topology not in topology.TopologySchedule.KINDS:
+            raise ValueError(
+                f"topology {self.topology!r}; known: "
+                f"{topology.TopologySchedule.KINDS}")
+        if self.gossip not in GOSSIP_MODES:
+            raise ValueError(
+                f"gossip {self.gossip!r}; known: {GOSSIP_MODES}")
+        if self.codec is not None and self.codec not in compress.KINDS:
+            raise ValueError(
+                f"codec {self.codec!r}; known: {compress.KINDS}")
+        if self.participation not in sampling.KINDS:
+            raise ValueError(
+                f"participation {self.participation!r}; known: "
+                f"{sampling.KINDS}")
+        if self.participation == "full" and self.participation_frac != 1.0:
+            raise ValueError(
+                f"participation_frac={self.participation_frac} needs "
+                f"participation='uniform' or 'trace' (the 'full' sampler "
+                f"acts on every client)")
+        if self.participation != "full" \
+                and not 0.0 < self.participation_frac <= 1.0:
+            raise ValueError(f"participation_frac="
+                             f"{self.participation_frac}; want (0, 1]")
+        if self.block_m is not None and self.gossip != "pallas":
+            # same loud-knob rule as ops.gossip_gather: the DMA panel
+            # height only exists on the kernel path
+            raise ValueError(
+                f"block_m tunes the pallas kernels; gossip="
+                f"{self.gossip!r} never dispatches them (drop the knob "
+                f"or set gossip='pallas')")
+        if self.gossip == "ppermute":
+            if self.codec is not None:
+                raise ValueError(
+                    "codec and gossip='ppermute' are mutually exclusive: "
+                    "the codec path owns the wire crossing "
+                    "(gossip.mix_flat); ppermute is a mix override")
+            if self.participation != "full":
+                raise ValueError(
+                    "ppermute offsets address all m shards; the sampled "
+                    "round mixes the compact working set — use a matrix "
+                    "gossip mode")
+        if self.codec is not None and not self.resident:
+            raise ValueError(
+                "wire codecs live on the resident flat buffer; "
+                "resident=False has no payload boundary")
+
+    # -- name -> object resolution (the registries) -----------------------
+    def schedule(self, m: int) -> topology.TopologySchedule:
+        """The run's ONE TopologySchedule at client count m.  Undirected
+        algorithms (dfedavgm/dispfl) force the undirected kind — their
+        mixing has no push-sum de-bias to absorb asymmetry."""
+        if self.algo in UNDIRECTED_ALGOS:
+            return topology.get_schedule("undirected", m,
+                                         self.n_neighbors, self.seed)
+        return topology.get_schedule(self.topology, m, self.n_neighbors,
+                                     self.seed)
+
+    def make_codec(self):
+        """The wire codec instance, or None (uncompressed)."""
+        return compress.get_codec(self.codec, ratio=self.codec_ratio,
+                                  bits=self.codec_bits, seed=self.seed)
+
+    def sampler(self, m: int, profile=None):
+        """The ParticipationSampler, or None for full participation."""
+        return sampling.get_sampler(self.participation, m,
+                                    self.participation_frac, self.seed,
+                                    profile)
+
+
+def make_algo_spec(algo: str = "dfedpgp", **kw) -> AlgoSpec:
+    """THE factory: every entrypoint builds its AlgoSpec here.  Accepts
+    the historical Regime B alias gossip="matrix" (the mixing-matrix
+    contraction — i.e. the sparse engine) and normalizes it, so CLI flags
+    map 1:1."""
+    if kw.get("gossip") == "matrix":
+        kw["gossip"] = "sparse"
+    return AlgoSpec(algo=algo, **kw)

@@ -121,23 +121,26 @@ def test_fully_connected_mix_any_is_mean():
 # ---------------------------------------------------------------------------
 # simulator integration
 # ---------------------------------------------------------------------------
-def test_make_schedule_kinds():
+def test_resolved_schedule_kinds():
     sim = simulator.SimConfig(m=8, n_neighbors=3, seed=4)
-    assert simulator.make_schedule("dfedpgp", sim).kind == "random"
-    assert simulator.make_schedule("dfedavgm", sim).kind == "undirected"
+    sched = simulator.resolve_spec("dfedpgp", sim).schedule(sim.m)
+    assert sched.kind == "random"
+    assert simulator.resolve_spec("dfedavgm", sim).schedule(sim.m).kind \
+        == "undirected"
     for topo_name in ("exponential", "ring", "full"):
-        s = simulator.make_schedule(
-            "dfedpgp", dataclasses.replace(sim, topology=topo_name))
+        s = simulator.resolve_spec(
+            "dfedpgp",
+            dataclasses.replace(sim, topology=topo_name)).schedule(sim.m)
         assert s.kind == topo_name
     with pytest.raises(ValueError):
-        simulator.make_schedule(
+        simulator.resolve_spec(
             "dfedpgp", dataclasses.replace(sim, topology="torus"))
 
 
-def test_make_schedule_deterministic_in_seed():
+def test_resolved_schedule_deterministic_in_seed():
     sim = simulator.SimConfig(m=10, n_neighbors=3, seed=7)
-    s1 = simulator.make_schedule("dfedpgp", sim)
-    s2 = simulator.make_schedule("dfedpgp", sim)
+    s1 = simulator.resolve_spec("dfedpgp", sim).schedule(sim.m)
+    s2 = simulator.resolve_spec("dfedpgp", sim).schedule(sim.m)
     for t in (0, 3):
         np.testing.assert_array_equal(np.asarray(s1.at(t).idx),
                                       np.asarray(s2.at(t).idx))
