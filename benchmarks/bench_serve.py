@@ -16,8 +16,11 @@ B in {1, 64, 1024}:
 Per batch size the artifact records request throughput (rps at the median
 call) and tail latency (p50/p99 per-call wall ms) for the fused engine,
 best-of-N times for both engines, and their ratio (`speedup_fused` — the
-PR's headline number at B=1024).  Two parity flags ride on every row and
-are HARD gates in check_regression.py:
+PR's headline number at B=1024).  Timing runs through the engine's own
+`serve.ServeMeter` (PR 8) — the same instrumented wrappers production
+callers get with meter= — so the bench numbers and live telemetry share
+one timing discipline.  Two parity flags ride on every row and are HARD
+gates in check_regression.py:
 
   parity_serve_ok  — served logits are bit-for-bit eval_params_flat's
                      per-user evaluation (the tier-1 form of this claim
@@ -32,7 +35,6 @@ from __future__ import annotations
 import argparse
 import json
 import platform
-import time
 from pathlib import Path
 
 import numpy as np
@@ -41,6 +43,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import serve
+from repro.obs import SCHEMA_VERSION
 from repro.core import dfedpgp, partition
 from repro.kernels import ref
 from repro.kernels.head_gather import head_gather_matmul_pallas
@@ -77,17 +80,21 @@ def _fleet(m: int = M, seed: int = 0):
     return algo, state, layout
 
 
-def _times_ms(fn, *args, iters: int = 30):
-    """Per-call wall times (ms) after one warmup: the full distribution,
-    so the artifact can report the median-call throughput AND the p99
-    tail (serving is a latency product, not only a throughput one)."""
-    jax.block_until_ready(fn(*args))
-    out = []
+def _times_ms(fn, meter, path, uid, x, iters: int = 30):
+    """Per-call wall times (ms) after one warmup, read back from the
+    engine's ServeMeter window: `fn` is a METERED server, so each call
+    is timed by the same perf_counter + block_until_ready wrapper live
+    telemetry uses.  The warmup call is observed then dropped from the
+    window, leaving exactly the `iters` measured calls — the full
+    distribution, so the artifact can report the median-call throughput
+    AND the p99 tail (serving is a latency product, not only a
+    throughput one)."""
+    B = uid.shape[0]
+    fn(uid, x)               # warmup (compile); lands in the window...
+    meter.clear(path, B)     # ...and is discarded before measuring
     for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        out.append((time.perf_counter() - t0) * 1e3)
-    return out
+        fn(uid, x)
+    return meter.latencies(path, B)
 
 
 def _parities(algo, state, layout, sstate):
@@ -124,16 +131,17 @@ def main(quick: bool = False, out: Path = OUT):
     models = algo.eval_params_flat(state, layout)
     parity = _parities(algo, state, layout, sstate)
 
-    fused = serve.make_cnn_server(sstate, CFG)
-    naive = serve.make_naive_server(models, CFG)
+    meter = serve.ServeMeter(window=max(iters, 64))
+    fused = serve.make_cnn_server(sstate, CFG, meter=meter)
+    naive = serve.make_naive_server(models, CFG, meter=meter)
 
     rows = []
     for B in BATCHES:
         kx, ku = jax.random.split(jax.random.PRNGKey(B))
         x = jax.random.normal(kx, (B, CFG.image_size, CFG.image_size, 3))
         uid = jax.random.randint(ku, (B,), 0, M, jnp.int32)
-        tf = _times_ms(fused, uid, x, iters=iters)
-        tn = _times_ms(naive, uid, x, iters=iters)
+        tf = _times_ms(fused, meter, "fused", uid, x, iters=iters)
+        tn = _times_ms(naive, meter, "naive", uid, x, iters=iters)
         p50, p99 = (float(np.percentile(tf, q)) for q in (50, 99))
         row = {"batch": B, "m": M,
                "rps_fused": round(B / (p50 / 1e3), 1),
@@ -149,8 +157,8 @@ def main(quick: bool = False, out: Path = OUT):
               f"naive={row['t_naive_ms']:.3f}ms  "
               f"speedup={row['speedup_fused']}x")
 
-    report = {"bench": "serve", "quick": quick,
-              "platform": platform.machine(),
+    report = {"bench": "serve", "schema_version": SCHEMA_VERSION,
+              "quick": quick, "platform": platform.machine(),
               "backend": jax.default_backend(),
               "m": M, "iters": iters, "rows": rows}
     Path(out).write_text(json.dumps(report, indent=1))

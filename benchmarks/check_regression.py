@@ -74,6 +74,15 @@ BASELINE_COMPRESS = ROOT / "BENCH_compress.json"
 BASELINE_SCALE = ROOT / "BENCH_scale.json"
 BASELINE_SERVE = ROOT / "BENCH_serve.json"
 
+# Highest bench-artifact schema this gate knows how to read.  Benches
+# stamp their reports with repro.obs.SCHEMA_VERSION (the telemetry
+# spine's record schema); this constant is a local pin of the same
+# number because the gate runs without PYTHONPATH=src in CI.  Artifacts
+# with NO stamp are pre-PR-8 (v0 legacy) and read fine; artifacts
+# stamped NEWER than this fail loudly rather than being half-parsed
+# (tests/test_obs.py pins the two numbers equal).
+SUPPORTED_SCHEMA = 1
+
 RATIO_FLOOR = 0.7        # fresh speedup may drop to 70% of baseline
 # The baseline artifact is committed from one machine and CI runs on
 # another, and the quick-grid timings are sub-millisecond (the same shape
@@ -94,7 +103,14 @@ SCALE_FLOOR_CAP = 2.0
 
 def load(path: Path) -> dict:
     with open(path) as f:
-        return json.load(f)
+        report = json.load(f)
+    v = report.get("schema_version", 0)
+    if v > SUPPORTED_SCHEMA:
+        raise SystemExit(
+            f"{path}: artifact schema v{v} is newer than this gate "
+            f"understands (v{SUPPORTED_SCHEMA}) — update "
+            f"benchmarks/check_regression.py alongside repro.obs")
+    return report
 
 
 def by_shape(report: dict) -> dict:

@@ -11,6 +11,10 @@ import time
 from pathlib import Path
 
 from repro.fl.simulator import SimConfig, run_experiment
+# the device-memory meters moved to the telemetry spine (PR 8): obs owns
+# resource gauges now — re-exported here so existing bench imports keep
+# working (docs/observability.md §Gauges)
+from repro.obs.gauges import accounted_bytes, peak_device_memory  # noqa: F401
 
 ARTIFACTS = Path(__file__).resolve().parent / "artifacts"
 
@@ -32,42 +36,12 @@ def sim(**kw):
 
 
 def run(algo, simcfg, **kw):
-    t0 = time.time()
+    t0 = time.perf_counter()
     h = run_experiment(algo, simcfg, eval_every=5, **kw)
-    h["wall_s"] = round(time.time() - t0, 1)
+    h["wall_s"] = round(time.perf_counter() - t0, 1)
     return h
 
 
-def peak_device_memory():
-    """Peak bytes in use on device 0, from the backend's allocator stats
-    (jax Device.memory_stats — populated on TPU/GPU).  The CPU backend
-    reports no allocator stats, so benches pair this with the deterministic
-    bytes-accounting columns (accounted_* below) and record None here —
-    the committed artifact then documents which meter produced the number.
-    """
-    import jax
-    try:
-        stats = jax.devices()[0].memory_stats()
-    except Exception:
-        return None
-    if not stats:
-        return None
-    peak = stats.get("peak_bytes_in_use")
-    return int(peak) if peak else None
-
-
-def accounted_bytes(*arrays) -> int:
-    """Deterministic memory meter: total bytes of the given live arrays
-    (buffers, working sets, neighbor tables).  Unlike allocator peaks this
-    is identical across runners, so check_regression.py can pin it as a
-    hard ceiling — any growth is a real change in what the path
-    materializes, not noise."""
-    total = 0
-    for a in arrays:
-        leaves = a if isinstance(a, (list, tuple)) else [a]
-        for x in leaves:
-            total += int(x.size) * int(x.dtype.itemsize)
-    return total
 
 
 def save_rows(name: str, rows: list[dict]):

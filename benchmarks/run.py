@@ -12,7 +12,8 @@
   G1     bench_gossip      sparse vs dense gossip-step wall time (§Perf)
   R1     roofline          three-term roofline from the dry-run artifacts
 
-  PYTHONPATH=src python -m benchmarks.run [--quick] [--only E1,E4]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--only E1,E4] \\
+      [--profile DIR]
 """
 from __future__ import annotations
 
@@ -27,8 +28,15 @@ def main(argv=None):
                     help="tiny grid for CI smoke")
     ap.add_argument("--only", default="",
                     help="comma list: E1,E3,E4,E5,R1")
+    ap.add_argument("--profile", default="",
+                    help="trace directory: wrap the selected suites in "
+                         "jax.profiler.trace (repro.obs.maybe_trace) — "
+                         "the named_scope phase labels from the round "
+                         "and serve paths land on the device timeline")
     args = ap.parse_args(argv)
     only = set(args.only.split(",")) if args.only else None
+
+    from repro.obs import maybe_trace
 
     from . import (bench_ablation, bench_accuracy, bench_async,
                    bench_compress, bench_gossip, bench_hetero,
@@ -41,19 +49,21 @@ def main(argv=None):
               ("E8", bench_compress), ("E9", bench_scale),
               ("E10", bench_serve), ("G1", bench_gossip),
               ("R1", roofline)]
-    t0 = time.time()
+    t0 = time.perf_counter()
     failures = 0
-    for tag, mod in suites:
-        if only and tag not in only:
-            continue
-        print(f"\n#### {tag}: {mod.__name__} "
-              f"({time.time() - t0:.0f}s elapsed)", flush=True)
-        try:
-            mod.main(quick=args.quick)
-        except Exception as e:  # report, keep going
-            failures += 1
-            print(f"[{tag}] FAILED: {type(e).__name__}: {e}")
-    print(f"\n#### done in {time.time() - t0:.0f}s, failures={failures}")
+    with maybe_trace(args.profile or None):
+        for tag, mod in suites:
+            if only and tag not in only:
+                continue
+            print(f"\n#### {tag}: {mod.__name__} "
+                  f"({time.perf_counter() - t0:.0f}s elapsed)", flush=True)
+            try:
+                mod.main(quick=args.quick)
+            except Exception as e:  # report, keep going
+                failures += 1
+                print(f"[{tag}] FAILED: {type(e).__name__}: {e}")
+    print(f"\n#### done in {time.perf_counter() - t0:.0f}s, "
+          f"failures={failures}")
     return 1 if failures else 0
 
 

@@ -20,6 +20,7 @@ from typing import Any, Callable, NamedTuple, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs import gauges as obs_gauges
 from repro.optim import SGD, SGDState
 from . import gossip, local, partition
 
@@ -123,6 +124,13 @@ class DFedPGP:
     # growing one backs consensus off until the pipe catches up
     # (docs/compress.md §Step size; resident sync rounds only).
     codec_gamma: Any = 1.0         # float in (0, 1], or "auto"
+    # in-graph round gauges (repro.obs, docs/observability.md): when True
+    # the resident rounds return extra f32 reductions in `metrics`
+    # (consensus gap, mass ledger, EF ratio, grad/update norms, wire
+    # edges).  STATIC — the gauges are pure reads next to the donated
+    # carry, and with telemetry=False the traced round is the exact
+    # uninstrumented program (tests/test_obs.py pins bit-for-bit).
+    telemetry: bool = False
 
     # ------------------------------------------------------------------
     def init(self, stacked_params) -> DFedPGPState:
@@ -212,6 +220,11 @@ class DFedPGP:
             raise ValueError("wire codecs ride the resident flat buffer "
                              "(round_fn_flat / the async runtime); the "
                              "tree-form round_fn has no payload boundary")
+        if self.telemetry:
+            raise ValueError("telemetry gauges read the resident "
+                             "(m, d_flat) buffer (round_fn_flat / "
+                             "round_fn_sampled); the tree-form round_fn "
+                             "has no buffer to gauge")
         lr_scale = self.lr_decay ** state.round.astype(jnp.float32)
         if step_gate_u is None:
             shp = jax.tree.leaves(batches["u"])[0].shape[:2]   # (m, K_u)
@@ -331,13 +344,33 @@ class DFedPGP:
         to [0.05, 1].  With a zero residual the ratio is exactly 1.0 (the
         plain tracked mix); as the error-feedback memory grows relative to
         the signal, g backs off so the sparse pipe drains instead of
-        accumulating (docs/compress.md §Step size)."""
+        accumulating (docs/compress.md §Step size).
+
+        The ratio itself is `obs.gauges.ef_signal_ratio` — ONE definition
+        shared by the anneal and the telemetry stream, so the gauge a run
+        records is exactly the step size the mix used."""
         if not isinstance(self.codec_gamma, str):
             return self.codec_gamma
-        un = jnp.linalg.norm(flat.astype(jnp.float32))
-        en = jnp.linalg.norm(ef.astype(jnp.float32))
-        eps = jnp.float32(1e-12)
-        return jnp.clip((un + eps) / (un + en + eps), 0.05, 1.0)
+        return jnp.clip(obs_gauges.ef_signal_ratio(flat, ef), 0.05, 1.0)
+
+    def _round_gauges(self, *, flat, mu, upd_before, upd_after, ef_pre,
+                      grad_norm, P, active_mask=None):
+        """The telemetry=True aux pack of the resident rounds (repro.obs,
+        docs/observability.md §Gauges): pure f32 reductions over the
+        post-round buffer — consensus gap, mass ledger, grad/update norms,
+        wire edges, and (lossy codecs) the EF signal ratio the "auto"
+        anneal reads.  Never touches the state that flows on."""
+        g = dict(obs_gauges.consensus_gap(flat, mu))
+        g.update(obs_gauges.mass_ledger(mu, active_mask))
+        g["update_norm"] = obs_gauges.buffer_update_norm(upd_before,
+                                                         upd_after)
+        g["grad_norm"] = grad_norm
+        g["wire_edges"] = obs_gauges.wire_edges(P)
+        if ef_pre is not None:
+            # same working set as _gamma_value: post-local signal vs the
+            # residual the mix is about to drain
+            g["ef_ratio"] = obs_gauges.ef_signal_ratio(upd_after, ef_pre)
+        return g
 
     # ------------------------------------------------------------------
     def local_update_flat(self, flat_row, personal, mu_i, opt_u, opt_v,
@@ -386,12 +419,21 @@ class DFedPGP:
                                           ).astype(new.dtype)
                 row2 = blend(row2, row)
                 s2 = SGDState(blend(s2.momentum, s.momentum))
+            if self.telemetry:
+                # gauge the POST-HOOK shared gradient (what the optimizer
+                # consumed); static gate, so the off-path scan carries the
+                # exact uninstrumented output structure
+                return (row2, s2), (loss,
+                                    jnp.linalg.norm(g.astype(jnp.float32)))
             return (row2, s2), loss
 
-        (flat_row, opt_u), losses_u = jax.lax.scan(
+        (flat_row, opt_u), aux_u = jax.lax.scan(
             u_step, (flat_row, opt_u), (batches_u, jnp.arange(K_u)))
-        return flat_row, personal, opt_u, opt_v, (loss_v,
-                                                  jnp.mean(losses_u))
+        if self.telemetry:
+            losses_u, gnorms_u = aux_u
+            return flat_row, personal, opt_u, opt_v, (
+                loss_v, jnp.mean(losses_u), jnp.mean(gnorms_u))
+        return flat_row, personal, opt_u, opt_v, (loss_v, jnp.mean(aux_u))
 
     # ------------------------------------------------------------------
     def tick_update_flat(self, flat_row, personal, mu_i, opt_u, opt_v,
@@ -479,33 +521,43 @@ class DFedPGP:
                 flat_row, personal, mu_i, opt_u, opt_v, bv, bu,
                 lr_scale, gate, layout)
 
-        flat, personal, opt_u, opt_v, (loss_v, loss_u) = jax.vmap(client)(
-            state.flat, state.personal, state.mu, state.opt_u, state.opt_v,
-            batches["v"], batches["u"], step_gate_u)
+        with jax.named_scope("dfedpgp.local"):
+            flat, personal, opt_u, opt_v, aux = jax.vmap(client)(
+                state.flat, state.personal, state.mu, state.opt_u,
+                state.opt_v, batches["v"], batches["u"], step_gate_u)
+        loss_v, loss_u = aux[0], aux[1]
+        flat_local = flat     # post-local / pre-mix view (update gauge)
 
-        if self.mix_fn_flat is not None:
-            # resident mix override (Regime B): the shard_map ppermute /
-            # fused-kernel mixes consume the buffer as-is
-            flat, mu = self.mix_fn_flat(flat, state.mu, state.round, P)
-            ef, ref = state.ef, state.ref
-        elif self.codec is not None:
-            # one wire crossing per round: the codec key folds the round
-            # index in, so randomized codecs (randk, qsgd) redraw per
-            # round deterministically in (codec.seed, round)
-            key = jax.random.fold_in(
-                jax.random.PRNGKey(self.codec.seed), state.round)
-            flat, mu, ef, ref = gossip.mix_flat(
-                P, flat, state.mu, mode=self.gossip, codec=self.codec,
-                ef=state.ef, ref=state.ref, key=key,
-                codec_gamma=self._gamma_value(flat, state.ef))
-        else:
-            flat, mu = gossip.mix_flat(P, flat, state.mu, mode=self.gossip,
-                                       wire_dtype=self.gossip_dtype)
-            ef, ref = state.ef, state.ref
+        with jax.named_scope("dfedpgp.mix"):
+            if self.mix_fn_flat is not None:
+                # resident mix override (Regime B): the shard_map ppermute
+                # / fused-kernel mixes consume the buffer as-is
+                flat, mu = self.mix_fn_flat(flat, state.mu, state.round, P)
+                ef, ref = state.ef, state.ref
+            elif self.codec is not None:
+                # one wire crossing per round: the codec key folds the
+                # round index in, so randomized codecs (randk, qsgd)
+                # redraw per round deterministically in (codec.seed, round)
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(self.codec.seed), state.round)
+                flat, mu, ef, ref = gossip.mix_flat(
+                    P, flat, state.mu, mode=self.gossip, codec=self.codec,
+                    ef=state.ef, ref=state.ref, key=key,
+                    codec_gamma=self._gamma_value(flat, state.ef))
+            else:
+                flat, mu = gossip.mix_flat(P, flat, state.mu,
+                                           mode=self.gossip,
+                                           wire_dtype=self.gossip_dtype)
+                ef, ref = state.ef, state.ref
         new_state = FlatDFedPGPState(flat, personal, mu, opt_u, opt_v,
                                      state.round + 1, ef, ref)
         metrics = {"loss_v": jnp.mean(loss_v), "loss_u": jnp.mean(loss_u),
                    "mu_min": jnp.min(mu), "mu_max": jnp.max(mu)}
+        if self.telemetry:
+            metrics.update(self._round_gauges(
+                flat=flat, mu=mu, upd_before=state.flat,
+                upd_after=flat_local, ef_pre=state.ef,
+                grad_norm=jnp.mean(aux[2]), P=P))
         return new_state, metrics
 
     # ------------------------------------------------------------------
@@ -552,35 +604,42 @@ class DFedPGP:
             step_gate_u = jnp.ones(shp, jnp.float32)
 
         take = lambda a: jnp.take(a, active, axis=0)
-        flat_a = take(state.flat)
-        mu_a = take(state.mu)
-        opt_u_a = SGDState(take(state.opt_u.momentum))
-        personal_a = jax.tree.map(take, state.personal)
-        opt_v_a = SGDState(jax.tree.map(take, state.opt_v.momentum))
+        with jax.named_scope("dfedpgp.gather"):
+            flat_a = take(state.flat)
+            mu_a = take(state.mu)
+            opt_u_a = SGDState(take(state.opt_u.momentum))
+            personal_a = jax.tree.map(take, state.personal)
+            opt_v_a = SGDState(jax.tree.map(take, state.opt_v.momentum))
+        flat_pre = flat_a     # gathered pre-local rows (update gauge)
 
         def client(flat_row, personal, mu_i, opt_u, opt_v, bv, bu, gate):
             return self.local_update_flat(
                 flat_row, personal, mu_i, opt_u, opt_v, bv, bu,
                 lr_scale, gate, layout)
 
-        flat_a, personal_a, opt_u_a, opt_v_a, (loss_v, loss_u) = jax.vmap(
-            client)(flat_a, personal_a, mu_a, opt_u_a, opt_v_a,
-                    batches["v"], batches["u"], step_gate_u)
+        with jax.named_scope("dfedpgp.local"):
+            flat_a, personal_a, opt_u_a, opt_v_a, aux = jax.vmap(
+                client)(flat_a, personal_a, mu_a, opt_u_a, opt_v_a,
+                        batches["v"], batches["u"], step_gate_u)
+        loss_v, loss_u = aux[0], aux[1]
+        flat_local = flat_a   # post-local / pre-mix compact rows
+        ef_pre = take(state.ef) if self.codec is not None else None
 
-        if self.codec is not None:
-            key = jax.random.fold_in(
-                jax.random.PRNGKey(self.codec.seed), state.round)
-            ef_a = take(state.ef)
-            ref_a = take(state.ref)
-            flat_a, mu_a, ef_a, ref_a = gossip.mix_flat(
-                P_act, flat_a, mu_a, mode=self.gossip, codec=self.codec,
-                ef=ef_a, ref=ref_a, key=key,
-                codec_gamma=self._gamma_value(flat_a, ef_a))
-        else:
-            ef_a = ref_a = None
-            flat_a, mu_a = gossip.mix_flat(
-                P_act, flat_a, mu_a, mode=self.gossip,
-                wire_dtype=self.gossip_dtype)
+        with jax.named_scope("dfedpgp.mix"):
+            if self.codec is not None:
+                key = jax.random.fold_in(
+                    jax.random.PRNGKey(self.codec.seed), state.round)
+                ef_a = ef_pre
+                ref_a = take(state.ref)
+                flat_a, mu_a, ef_a, ref_a = gossip.mix_flat(
+                    P_act, flat_a, mu_a, mode=self.gossip, codec=self.codec,
+                    ef=ef_a, ref=ref_a, key=key,
+                    codec_gamma=self._gamma_value(flat_a, ef_a))
+            else:
+                ef_a = ref_a = None
+                flat_a, mu_a = gossip.mix_flat(
+                    P_act, flat_a, mu_a, mode=self.gossip,
+                    wire_dtype=self.gossip_dtype)
 
         # ---- scatter the compact working set back; dormant rows never
         # materialize (the pallas path aliases the buffer in place) ----
@@ -590,22 +649,35 @@ class DFedPGP:
                                                       force="pallas")
         else:
             put = lambda buf, new: buf.at[active].set(new.astype(buf.dtype))
-        flat = put(state.flat, flat_a)
-        mu = state.mu.at[active].set(mu_a)
-        opt_u = SGDState(put(state.opt_u.momentum, opt_u_a.momentum))
-        personal = jax.tree.map(lambda full, new: full.at[active].set(new),
-                                state.personal, personal_a)
-        opt_v = SGDState(jax.tree.map(
-            lambda full, new: full.at[active].set(new),
-            state.opt_v.momentum, opt_v_a.momentum))
-        ef = state.ef if ef_a is None else put(state.ef, ef_a)
-        ref = state.ref if ref_a is None else put(state.ref, ref_a)
+        with jax.named_scope("dfedpgp.scatter"):
+            flat = put(state.flat, flat_a)
+            mu = state.mu.at[active].set(mu_a)
+            opt_u = SGDState(put(state.opt_u.momentum, opt_u_a.momentum))
+            personal = jax.tree.map(
+                lambda full, new: full.at[active].set(new),
+                state.personal, personal_a)
+            opt_v = SGDState(jax.tree.map(
+                lambda full, new: full.at[active].set(new),
+                state.opt_v.momentum, opt_v_a.momentum))
+            ef = state.ef if ef_a is None else put(state.ef, ef_a)
+            ref = state.ref if ref_a is None else put(state.ref, ref_a)
 
         new_state = FlatDFedPGPState(flat, personal, mu, opt_u, opt_v,
                                      state.round + 1, ef, ref)
         metrics = {"loss_v": jnp.mean(loss_v), "loss_u": jnp.mean(loss_u),
                    "mu_min": jnp.min(mu), "mu_max": jnp.max(mu),
                    "n_active": jnp.asarray(active.shape[0], jnp.int32)}
+        if self.telemetry:
+            # ledger over the FULL buffer with the dormant split visible;
+            # consensus gap likewise spans all m rows (dormant rows count
+            # — they are what the sampled round leaves behind)
+            active_mask = jnp.zeros(state.mu.shape, bool).at[active].set(
+                True)
+            metrics.update(self._round_gauges(
+                flat=flat, mu=mu, upd_before=flat_pre,
+                upd_after=flat_local, ef_pre=ef_pre,
+                grad_norm=jnp.mean(aux[2]), P=P_act,
+                active_mask=active_mask))
         return new_state, metrics
 
     # ------------------------------------------------------------------

@@ -17,9 +17,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro import compress
+from repro import obs
 from repro import spec as spec_mod
 from repro.core import baselines, dfedpgp, gossip, partition, topology
+from repro.obs import gauges as obs_gauges
 from repro.data import ClientData, make_dataset, sample_batches
 from repro.hetero import profiles as hetero_profiles
 from repro.hetero.runtime import AsyncRuntime
@@ -192,7 +193,7 @@ def build_algorithm(name: str, loss_fn, mask, sim: SimConfig,
             loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
             k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay,
             gossip=sp.gossip, codec=sp.make_codec(),
-            codec_gamma=sp.codec_gamma)
+            codec_gamma=sp.codec_gamma, telemetry=sp.telemetry)
     raise ValueError(f"unknown algorithm {name!r}; known: {ALGOS}")
 
 
@@ -219,13 +220,15 @@ def build_flat_core(name: str, loss_fn, mask, sim: SimConfig,
             loss_fn=loss_fn, mask=mask, opt_u=opt, opt_v=opt,
             k_v=sim.k_personal, k_u=sim.k_local, lr_decay=sim.lr_decay,
             gossip="pallas" if sp.gossip == "pallas" else "sparse",
-            codec=codec, codec_gamma=sp.codec_gamma)
+            codec=codec, codec_gamma=sp.codec_gamma,
+            telemetry=sp.telemetry)
     all_shared = jax.tree.map(lambda _: True, mask)
     return dfedpgp.DFedPGP(
         loss_fn=loss_fn, mask=all_shared, opt_u=opt, opt_v=opt,
         k_v=0, k_u=sim.k_local + sim.k_personal, lr_decay=sim.lr_decay,
         gossip="pallas" if sp.gossip == "pallas" else "sparse",
-        codec=codec, codec_gamma=sp.codec_gamma)
+        codec=codec, codec_gamma=sp.codec_gamma,
+        telemetry=sp.telemetry)
 
 
 # the async runtime's historical name for the same constructor
@@ -272,11 +275,15 @@ def run_experiment(algo_name: str, sim: SimConfig,
                    model_cfg: Optional[cnn.CNNConfig] = None,
                    step_gates: Optional[np.ndarray] = None,
                    eval_every: int = 10, verbose: bool = False,
-                   return_params: bool = False):
+                   return_params: bool = False, sink=None):
     """Returns history dict with per-eval round accuracies.  With
     return_params, history["params"] carries the final stacked
     personalized models (regression tests compare them across engine
-    knobs)."""
+    knobs).  sink: optional obs.MetricsSink — every round then emits one
+    schema-v1 "round" record (docs/observability.md) carrying the round
+    metrics, the wire meter, and (spec.telemetry) the in-graph gauges;
+    fetching gauges to the host costs one device sync per round, which is
+    why emission is opt-in while `history` stays the cheap default."""
     model_cfg = model_cfg or cnn.CNNConfig(image_size=sim.image_size,
                                            n_classes=sim.n_classes)
     key = jax.random.PRNGKey(sim.seed)
@@ -317,7 +324,8 @@ def run_experiment(algo_name: str, sim: SimConfig,
         return async_experiment(algo_name, sim, model_cfg, data, loss_fn,
                                 mask, stacked, k_run,
                                 eval_every=eval_every, verbose=verbose,
-                                return_params=return_params, spec=sp)
+                                return_params=return_params, spec=sp,
+                                sink=sink)
     codec = sp.make_codec()
     if codec is None and sp.codec_gamma != 1.0:
         raise ValueError(
@@ -385,27 +393,36 @@ def run_experiment(algo_name: str, sim: SimConfig,
             return algo.round_fn(state, ctx, b, step_gate_u=gate)
         return algo.round_fn(state, ctx, batches, step_gate=gate)
 
+    if sp.telemetry and not use_flat:
+        raise ValueError(
+            f"spec.telemetry gauges read the resident flat buffer; "
+            f"{algo_name!r} with resident={sp.resident} has no buffer to "
+            f"gauge (use dfedpgp with resident=True or a flat-core codec "
+            f"run)")
     # wire-bytes accounting (docs/compress.md): every directed non-self
     # edge of the round's topology carries one client payload; the
     # per-payload byte cost is static, so the meter is pure host-side
-    # bookkeeping (codec=None meters the uncompressed f32 wire)
+    # bookkeeping through the ONE obs formula both runtimes read
+    # (obs.gauges.payload_row_bytes — codec=None meters the uncompressed
+    # f32 wire)
     wire_rb = None
+    wire_total = 0
     if schedule is not None:
         full_mask = jax.tree.map(lambda _: True, mask)
         wire_mask = mask if algo_name in ("dfedpgp", "dfedavgm-p") \
             else full_mask
         d_wire = gossip.flat_width(stacked, wire_mask)
-        wire_rb = codec.row_bytes(d_wire) if codec is not None \
-            else 4 * d_wire + compress.MU_BYTES
+        wire_rb = obs_gauges.payload_row_bytes(codec, d_wire)
+        # lossy codecs track against bootstrapped reference copies
+        # (compress.init_ref): first contact ships one full-fidelity row
+        # per client — metered here, so the reduction claims stay honest
+        wire_total = obs_gauges.bootstrap_bytes(codec, sim.m, d_wire)
 
     history = {"round": [], "acc": [], "loss": [], "vtime": [],
                "wire_bytes": [], "algo": algo_name, "runtime": "sync"}
-    # lossy codecs track against bootstrapped reference copies
-    # (compress.init_ref): first contact ships one full-fidelity row per
-    # client — metered here, so the reduction claims stay honest
-    wire_total = 0 if codec is None or codec.exact \
-        else sim.m * 4 * d_wire
-    t0 = time.time()
+    run_id = f"{algo_name}-sync-seed{sim.seed}"
+    timer = obs.PhaseTimer()
+    t0 = time.perf_counter()
     for r in range(sim.rounds):
         k_r = jax.random.fold_in(k_run, r)
         # 3-way split kept so the k_batch/k_cfl streams match the
@@ -426,25 +443,26 @@ def run_experiment(algo_name: str, sim: SimConfig,
                 active = jnp.asarray(sampler.active_at(r))
                 P_act = topology.induced_subgraph(topo, active, "row")
                 P_meter = P_act   # only active<->active edges carry bytes
-            idx_np, w_np = np.asarray(P_meter.idx), np.asarray(P_meter.w)
-            n_rows = idx_np.shape[0]
-            edges = int(((w_np > 0)
-                         & (idx_np != np.arange(n_rows)[:, None])).sum())
-            wire_total += edges * wire_rb
+            wire_total += obs_gauges.edge_count(P_meter) * wire_rb
         if step_gates is not None:
             gate = jnp.asarray(step_gates, jnp.float32)
             gate_u = gate[:, :sim.k_local] if algo_name == "dfedpgp" else \
                 gate[:, :k_total]
         else:
             gate_u = None
-        if active is not None:
-            state, metrics = round_sampled_jit(state, P_act, active,
-                                               batches, gate_u)
-        else:
-            state, metrics = round_jit(state, ctx, batches, gate_u)
+        with timer.phase("round"):
+            if active is not None:
+                state, metrics = round_sampled_jit(state, P_act, active,
+                                                   batches, gate_u)
+            else:
+                state, metrics = round_jit(state, ctx, batches, gate_u)
+            if sink is not None:
+                jax.block_until_ready(metrics)
 
+        acc = None
         if (r + 1) % eval_every == 0 or r == sim.rounds - 1:
-            acc, _ = evaluate(eval_params(state), data, model_cfg)
+            with timer.phase("eval"):
+                acc, _ = evaluate(eval_params(state), data, model_cfg)
             history["round"].append(r + 1)
             history["acc"].append(acc)
             # lockstep rounds: every round costs k_total ticks of the
@@ -457,7 +475,15 @@ def run_experiment(algo_name: str, sim: SimConfig,
                                          else metrics["loss_u"]))
             if verbose:
                 print(f"[{algo_name}] round {r+1:4d} acc={acc:.4f} "
-                      f"({time.time()-t0:.1f}s)")
+                      f"({time.perf_counter()-t0:.1f}s)")
+        if sink is not None:
+            sink.emit(obs.round_record(
+                run=run_id, algo=algo_name, step=r + 1, m=sim.m, acc=acc,
+                vtime=float((r + 1) * k_total), wire_bytes=wire_total,
+                **timer.gauges(),
+                **{k: v for k, v in metrics.items()
+                   if jnp.ndim(v) == 0}))
+            timer.reset()
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     if return_params:
         history["params"] = eval_params(state)
@@ -516,10 +542,12 @@ def async_round(runtime: AsyncRuntime, tick_fn, state, schedule, data,
 def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
                      loss_fn, mask, stacked, k_run, eval_every: int = 10,
                      verbose: bool = False, return_params: bool = False,
-                     spec: Optional[spec_mod.AlgoSpec] = None):
+                     spec: Optional[spec_mod.AlgoSpec] = None, sink=None):
     """The `runtime="async"` leg of run_experiment: same data, model and
     protocol constants, but rounds become windows of ticks on the virtual
-    clock and history carries virtual-time-to-accuracy."""
+    clock and history carries virtual-time-to-accuracy.  sink: optional
+    obs.MetricsSink — each tick WINDOW then emits one schema-v1 "tick"
+    record (the last tick's gauges + the cumulative wire meter)."""
     sp = spec if spec is not None else resolve_spec(algo_name, sim)
     profile = hetero_profiles.make_profile(
         sim.hetero, sim.m, spread=sim.speed_spread,
@@ -532,25 +560,33 @@ def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
     sampler = sp.sampler(sim.m, profile)
     tick_fn = jax.jit(lambda s, topo, b, part: runtime.tick(
         s, topo, b, participation=part))
-    wire_rb = core.codec.row_bytes(runtime.layout.d_flat) \
-        if core.codec is not None \
-        else 4 * runtime.layout.d_flat + compress.MU_BYTES
-    # reference-bootstrap bytes (see the sync meter above)
-    wire_boot = 0 if core.codec is None or core.codec.exact \
-        else sim.m * 4 * runtime.layout.d_flat
+    # the SAME obs wire formulas the sync meter reads (the historical
+    # inline duplicate here is the asymmetry tests/test_compress.py pins)
+    wire_rb = obs_gauges.payload_row_bytes(core.codec,
+                                           runtime.layout.d_flat)
+    wire_boot = obs_gauges.bootstrap_bytes(core.codec, sim.m,
+                                           runtime.layout.d_flat)
 
     history = {"round": [], "acc": [], "loss": [], "vtime": [],
                "wire_bytes": [], "mean_local_rounds": [],
                "algo": algo_name, "runtime": "async"}
-    t0 = time.time()
+    run_id = f"{algo_name}-async-seed{sim.seed}"
+    timer = obs.PhaseTimer()
+    t0 = time.perf_counter()
     tick = 0
     wire_edges = jnp.zeros((), jnp.int32)
     for r in range(sim.rounds):
-        state, metrics, tick, wire_edges = async_round(
-            runtime, tick_fn, state, schedule, data, sim, k_run, tick,
-            wire_edges, sampler=sampler)
+        with timer.phase("window"):
+            state, metrics, tick, wire_edges = async_round(
+                runtime, tick_fn, state, schedule, data, sim, k_run, tick,
+                wire_edges, sampler=sampler)
+            if sink is not None:
+                jax.block_until_ready(metrics)
+        acc = None
         if (r + 1) % eval_every == 0 or r == sim.rounds - 1:
-            acc, _ = evaluate(runtime.eval_params(state), data, model_cfg)
+            with timer.phase("eval"):
+                acc, _ = evaluate(runtime.eval_params(state), data,
+                                  model_cfg)
             history["round"].append(r + 1)
             history["acc"].append(acc)
             history["vtime"].append(float(metrics["vtime"]))
@@ -563,7 +599,15 @@ def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
                 print(f"[{algo_name}/async] window {r+1:4d} "
                       f"vtime={float(metrics['vtime']):.0f} acc={acc:.4f} "
                       f"mass={float(metrics['mass_total']):.3f} "
-                      f"({time.time()-t0:.1f}s)")
+                      f"({time.perf_counter()-t0:.1f}s)")
+        if sink is not None:
+            sink.emit(obs.tick_record(
+                run=run_id, algo=algo_name, step=r + 1, m=sim.m, acc=acc,
+                wire_bytes=int(wire_edges) * wire_rb + wire_boot,
+                **timer.gauges(),
+                **{k: v for k, v in metrics.items()
+                   if jnp.ndim(v) == 0}))
+            timer.reset()
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     if return_params:
         history["params"] = runtime.eval_params(state)

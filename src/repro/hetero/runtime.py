@@ -158,6 +158,7 @@ class AsyncRuntime:
         mail, got_f, got_mu = mbox.drain(mail, starters)
         flat = state.flat + got_f.astype(state.flat.dtype)
         mu = state.mu + got_mu
+        flat_pre_step = flat   # post-drain view (telemetry update gauge)
 
         # 3. one alternating step per active client
         lr_scale = algo.lr_decay ** state.local_round.astype(jnp.float32)
@@ -168,9 +169,10 @@ class AsyncRuntime:
             return algo.tick_update_flat(row, pv, mu_i, ou, ov, b, iv, ls,
                                          self.layout, has_v)
 
-        flat2, personal2, ou2, ov2, loss = jax.vmap(client)(
-            flat, state.personal, mu, state.opt_u, state.opt_v, batches,
-            in_v, lr_scale)
+        with jax.named_scope("async.local"):
+            flat2, personal2, ou2, ov2, loss = jax.vmap(client)(
+                flat, state.personal, mu, state.opt_u, state.opt_v,
+                batches, in_v, lr_scale)
 
         sel = lambda n, o: jnp.where(
             active.reshape((-1,) + (1,) * (n.ndim - 1)), n, o)
@@ -273,6 +275,28 @@ class AsyncRuntime:
             "mass_total": pushsum.total_mass(mu, mbox.mass(mail)),
             "vtime": clk.t.astype(jnp.float32),
         }
+        if algo.telemetry:
+            from repro.obs import gauges as obs_gauges
+
+            # in-flight-aware de-bias (same accounting as eval_params):
+            # a fired client's mass sits in the mailbox — including its
+            # self share — so u_eff/mu_eff is well-defined every tick
+            mail_f, mail_mu = mbox.in_flight(mail)
+            metrics.update(obs_gauges.consensus_gap(
+                flat + mail_f.astype(flat.dtype), mu + mail_mu))
+            metrics.update(obs_gauges.mass_ledger(mu, active,
+                                                  mbox.mass(mail)))
+            metrics.update(obs_gauges.staleness_gauges(local_round))
+            metrics.update(obs_gauges.mailbox_gauges(mail.slots_mu,
+                                                     mail.inbox_mu))
+            # step displacement of the buffer this tick (active clients
+            # moved; everyone else contributes exactly zero)
+            metrics["update_norm"] = obs_gauges.buffer_update_norm(
+                flat_pre_step, jnp.where(
+                    active.reshape((-1, 1)), flat2, flat_pre_step))
+            if state.ef is not None:
+                metrics["ef_ratio"] = obs_gauges.ef_signal_ratio(
+                    flat_pre_step, state.ef)
         new_state = AsyncState(flat, personal, mu, opt_u, opt_v, phase,
                                local_round, clk, mail, ef, ref)
         return new_state, metrics

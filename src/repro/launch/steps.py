@@ -431,6 +431,9 @@ def build_train_algo(cfg: ModelConfig, mesh: "Mesh | None", layout: Layout,
     kwargs are the deprecated legacy surface (one release)."""
     gossip, schedule, resident, _ = _resolve_regime_b(
         layout, spec, gossip, schedule, resident, "build_train_algo")
+    # in-graph round gauges (repro.obs): spec-only — the legacy kwarg
+    # surface predates telemetry and never grows new knobs
+    telemetry = spec.telemetry if spec is not None else False
     api = get_model(cfg)
 
     def loss_fn(p, batch):
@@ -477,7 +480,8 @@ def build_train_algo(cfg: ModelConfig, mesh: "Mesh | None", layout: Layout,
                            mix_fn_flat=mix_fn_flat,
                            grad_hook=grad_hook,
                            grad_hook_flat=grad_hook_flat,
-                           gossip_dtype=gossip_dtype or None)
+                           gossip_dtype=gossip_dtype or None,
+                           telemetry=telemetry)
     return algo, mask, params_struct, flat_layout
 
 

@@ -22,16 +22,17 @@ from __future__ import annotations
 
 import argparse
 import functools
-import time
 
 import jax
 import jax.numpy as jnp
 
+from repro import obs
 from repro.configs import get_config, get_reduced
 from repro.core import partition, topology
 from repro.launch import steps
 from repro.launch.mesh import make_host_mesh
 from repro.models import get_model
+from repro.obs import gauges as obs_gauges
 from repro.spec import make_algo_spec
 
 
@@ -61,7 +62,7 @@ def make_cli_spec(args, gossip: str):
         "dfedpgp", topology=kind, n_neighbors=args.neighbors,
         seed=args.seed, gossip=gossip, resident=args.resident,
         participation="uniform" if args.sample < 1.0 else "full",
-        participation_frac=args.sample)
+        participation_frac=args.sample, telemetry=args.telemetry)
 
 
 def main(argv=None):
@@ -93,6 +94,18 @@ def main(argv=None):
                     help="participation fraction per round (docs/scale.md): "
                          "< 1 draws a seeded uniform subset each round and "
                          "runs the compact sampled step (needs --resident)")
+    ap.add_argument("--telemetry", action="store_true",
+                    help="in-graph round gauges (repro.obs; needs "
+                         "--resident): consensus gap, mass ledger, "
+                         "grad/update norms ride the round metrics")
+    ap.add_argument("--metrics", default="",
+                    help="JSONL path: emit one schema-v1 round record per "
+                         "round through obs.JsonlSink (render with "
+                         "`python -m repro.obs.report <path>`)")
+    ap.add_argument("--profile", default="",
+                    help="trace directory: wrap the round loop in "
+                         "jax.profiler.trace (view phase-labelled device "
+                         "timelines in xprof/tensorboard)")
     args = ap.parse_args(argv)
 
     cfg = get_reduced(args.arch) if args.reduced else get_config(args.arch)
@@ -119,6 +132,9 @@ def main(argv=None):
     if sampled and gossip == "ppermute":
         ap.error("--sample < 1 mixes the compact working set; ppermute "
                  "offsets address all m shards — use --gossip matrix")
+    if args.telemetry and not args.resident:
+        ap.error("--telemetry gauges read the resident flat buffer; "
+                 "add --resident")
     spec = make_cli_spec(args, gossip)
     # the spec is the run's one knob object: the schedule the round loop
     # mixes over and the sampler it draws from resolve from the SAME spec
@@ -166,33 +182,56 @@ def main(argv=None):
           f"topology={schedule.kind} resident={args.resident}"
           + (f" sample={args.sample} ({n_lead}/{m})" if sampled else ""))
 
+    # one record per round through the telemetry spine (repro.obs): the
+    # printed line IS the record's rendered form, so the JSONL artifact
+    # and the console never disagree
+    sink = obs.JsonlSink(args.metrics) if args.metrics else obs.NULL_SINK
+    run_id = f"trainB-{cfg.arch_id}-seed{args.seed}"
+    d_wire = partition.count_params(template, mask, True)
+    wire_rb = obs_gauges.payload_row_bytes(None, d_wire)
+    wire_total = 0
+    timer = obs.PhaseTimer()
+
     import contextlib
     ctx = mesh if mesh is not None else contextlib.nullcontext()
-    with ctx:
+    with ctx, obs.maybe_trace(args.profile or None):
         for r in range(args.rounds):
-            kr = jax.random.fold_in(key, r + 1)
-            kb, _ = jax.random.split(kr)
-            batches = {
-                "v": synth_lm_batch(kb, cfg, (n_lead, args.k_v, args.batch),
-                                    args.seq),
-                "u": synth_lm_batch(jax.random.fold_in(kb, 7), cfg,
-                                    (n_lead, args.k_u, args.batch),
-                                    args.seq),
-            }
-            t0 = time.time()
-            if sampler is not None:
-                active = jnp.asarray(sampler.active_at(r))
-                P_act = topology.induced_subgraph(schedule.at(r), active,
-                                                  "row")
-                state, metrics = round_fn(state, P_act, active, batches)
-            else:
-                state, metrics = round_fn(state, schedule.at(r), batches)
-            lu = float(metrics["loss_u"])
-            print(f"[train] round {r:3d} loss_u={lu:.4f} "
-                  f"loss_v={float(metrics['loss_v']):.4f} "
-                  f"mu=[{float(metrics['mu_min']):.3f},"
-                  f"{float(metrics['mu_max']):.3f}] "
-                  f"({time.time() - t0:.1f}s)")
+            with timer.phase("data"):
+                kr = jax.random.fold_in(key, r + 1)
+                kb, _ = jax.random.split(kr)
+                batches = {
+                    "v": synth_lm_batch(kb, cfg,
+                                        (n_lead, args.k_v, args.batch),
+                                        args.seq),
+                    "u": synth_lm_batch(jax.random.fold_in(kb, 7), cfg,
+                                        (n_lead, args.k_u, args.batch),
+                                        args.seq),
+                }
+            with timer.phase("round"):
+                if sampler is not None:
+                    active = jnp.asarray(sampler.active_at(r))
+                    P_r = topology.induced_subgraph(schedule.at(r), active,
+                                                    "row")
+                    state, metrics = round_fn(state, P_r, active, batches)
+                else:
+                    P_r = schedule.at(r)
+                    state, metrics = round_fn(state, P_r, batches)
+                metrics = jax.device_get(metrics)
+            wire_total += obs_gauges.edge_count(P_r) * wire_rb
+            rec = obs.round_record(
+                run=run_id, algo="dfedpgp", step=r, m=m,
+                loss=metrics["loss_u"], wire_bytes=wire_total,
+                round_s=timer.seconds("round"), **timer.gauges(),
+                **{k: v for k, v in metrics.items() if jnp.ndim(v) == 0})
+            timer.reset()
+            sink.emit(rec)
+            print(f"[train] {obs.record.render(rec)} "
+                  f"loss_v={rec['loss_v']:.4f} "
+                  f"mu=[{rec['mu_min']:.3f},{rec['mu_max']:.3f}]")
+    sink.close()
+    if args.metrics:
+        print(f"[train] metrics -> {args.metrics} "
+              f"(render: python -m repro.obs.report {args.metrics})")
     return state
 
 

@@ -1,0 +1,29 @@
+"""repro.obs — one telemetry spine for every execution path.
+
+Layers (docs/observability.md):
+  gauges    jit-safe in-graph reductions + host meters (wire bytes,
+            device memory) — the single source both runtimes read
+  record    versioned per-round/per-tick/per-serve record schema
+  sink      MetricsSink protocol: Null / Ring / Jsonl / Tee
+  profiler  maybe_trace (jax.profiler) + PhaseTimer (perf_counter)
+  report    `python -m repro.obs.report run.jsonl [--check]`
+
+Instrumentation is OFF by default and gated by `AlgoSpec.telemetry`;
+the uninstrumented round is bit-for-bit identical (tests/test_obs.py).
+"""
+from repro.obs import gauges, record
+from repro.obs.gauges import accounted_bytes, peak_device_memory
+from repro.obs.profiler import PhaseTimer, maybe_trace
+from repro.obs.record import (SCHEMA_VERSION, round_record, serve_record,
+                              tick_record)
+from repro.obs.sink import (NULL_SINK, JsonlSink, MetricsSink, NullSink,
+                            RingSink, TeeSink)
+
+__all__ = [
+    "gauges", "record",
+    "accounted_bytes", "peak_device_memory",
+    "PhaseTimer", "maybe_trace",
+    "SCHEMA_VERSION", "round_record", "tick_record", "serve_record",
+    "MetricsSink", "NullSink", "RingSink", "JsonlSink", "TeeSink",
+    "NULL_SINK",
+]

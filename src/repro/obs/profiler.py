@@ -1,0 +1,69 @@
+"""Profiler + wall-clock hooks (docs/observability.md §Profiling).
+
+Two layers, deliberately separate:
+
+  maybe_trace(dir)  device-level: wraps a region in jax.profiler.trace
+                    when `dir` is set, no-op otherwise.  The round code
+                    is already annotated with jax.named_scope on the
+                    local/mix/scatter/head-gather phases, so the trace
+                    viewer shows phase-labelled device timelines.
+  PhaseTimer        host-level: perf_counter phase buckets emitted as
+                    plain gauges on the round/tick record — cheap
+                    enough to leave on whenever telemetry is on.
+
+PhaseTimer measures HOST wall-clock: callers must block_until_ready()
+on the phase's outputs (or time a whole round whose result they fetch)
+for the number to mean device time; otherwise it measures dispatch.
+"""
+from __future__ import annotations
+
+import time
+from contextlib import contextmanager
+from typing import Optional
+
+import jax
+
+
+@contextmanager
+def maybe_trace(profile_dir: Optional[str]):
+    """jax.profiler.trace(profile_dir) when set, else a no-op — so
+    `--profile <dir>` can gate tracing without duplicating the loop."""
+    if not profile_dir:
+        yield
+        return
+    with jax.profiler.trace(profile_dir):
+        yield
+
+
+class PhaseTimer:
+    """Named perf_counter buckets: accumulate seconds per phase, then
+    `gauges()` renders them as `t_<phase>_s` record fields.
+
+        pt = PhaseTimer()
+        with pt.phase("round"):
+            state, metrics = step(state)
+            jax.block_until_ready(state)
+        sink.emit(round_record(step=r, **pt.gauges(), ...))
+
+    Re-entering a phase accumulates; `reset()` clears between emits."""
+
+    def __init__(self):
+        self._acc: dict = {}
+
+    @contextmanager
+    def phase(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            self._acc[name] = (self._acc.get(name, 0.0)
+                               + time.perf_counter() - t0)
+
+    def seconds(self, name: str) -> float:
+        return self._acc.get(name, 0.0)
+
+    def gauges(self) -> dict:
+        return {f"t_{k}_s": round(v, 6) for k, v in self._acc.items()}
+
+    def reset(self) -> None:
+        self._acc.clear()

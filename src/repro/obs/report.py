@@ -1,0 +1,152 @@
+"""`repro.obs.report` — render a run's JSONL into summary tables, and
+gate it in CI (docs/observability.md §Report).
+
+    PYTHONPATH=src python -m repro.obs.report run.jsonl [--check]
+
+Plain mode prints the per-kind summary tables the benchmarks used to
+hand-roll: round/tick progression (loss, acc, consensus gap, mass,
+wire bytes, phase timings) and serve latency percentiles per
+(path, batch) tag.  `--check` validates every record against the
+schema and hard-fails (exit 1) when the push-sum mass ledger drifts
+from its own first value beyond f32 tolerance — the CI telemetry
+smoke's teeth.  Jax-free on purpose: this must run anywhere.
+"""
+from __future__ import annotations
+
+import argparse
+import math
+import sys
+from typing import Iterable, List
+
+from repro.obs import record as _record
+
+# f32 tolerance for mass conservation — matches the runtime invariant
+# tests (tests/test_hetero_async.py pins rtol=1e-5 on mass_total).
+MASS_RTOL = 1e-5
+
+
+def percentile(xs: List[float], q: float) -> float:
+    """Nearest-rank percentile, q in [0, 100].  Tiny and dependency-free
+    — matches the ServeMeter's definition so report and live stats
+    agree."""
+    if not xs:
+        return float("nan")
+    s = sorted(xs)
+    k = max(0, min(len(s) - 1, int(math.ceil(q / 100.0 * len(s))) - 1))
+    return s[k]
+
+
+def _fmt(v, width=10):
+    if v is None:
+        return " " * (width - 1) + "-"
+    if isinstance(v, float):
+        return f"{v:>{width}.4g}"
+    return f"{v:>{width}}"
+
+
+def _table(rows: List[dict], cols: List[str], title: str) -> str:
+    cols = [c for c in cols if any(c in r for r in rows)]
+    if not rows or not cols:
+        return ""
+    head = " ".join(f"{c:>10}" for c in cols)
+    body = "\n".join(" ".join(_fmt(r.get(c)) for c in cols) for r in rows)
+    return f"\n== {title} ({len(rows)} records) ==\n{head}\n{body}\n"
+
+
+def summarize_rounds(recs: List[dict], kind: str) -> str:
+    cols = ["step", "loss", "acc", "vtime", "consensus_gap_mean",
+            "consensus_gap_max", "mass_total", "ef_ratio", "grad_norm",
+            "update_norm", "wire_bytes", "t_round_s", "round_s"]
+    rows = recs if len(recs) <= 12 else (
+        recs[:3] + [{"step": "..."}] + recs[-8:])
+    return _table(rows, cols, kind)
+
+
+def summarize_serve(recs: List[dict]) -> str:
+    by_tag: dict = {}
+    for r in recs:
+        by_tag.setdefault((r.get("path"), r.get("batch")), []).append(r)
+    rows = []
+    for (path, batch), group in sorted(by_tag.items(),
+                                       key=lambda kv: str(kv[0])):
+        lats = [r["latency_ms"] for r in group
+                if r.get("latency_ms") is not None]
+        rps = [r["rps"] for r in group if r.get("rps") is not None]
+        rows.append({"path": path, "batch": batch, "calls": len(group),
+                     "p50_ms": percentile(lats, 50),
+                     "p99_ms": percentile(lats, 99),
+                     "rps": percentile(rps, 50)})
+    return _table(rows, ["path", "batch", "calls", "p50_ms", "p99_ms",
+                         "rps"], "serve")
+
+
+def check_mass(recs: Iterable[dict]) -> List[str]:
+    """Mass-conservation gate: within each (run, algo, kind) stream the
+    mass_total gauge must stay at its first value to f32 rtol.  (Sync
+    and async both conserve total mass exactly in exact arithmetic —
+    row-stochastic pull mixing preserves the all-ones mu; the push form
+    banks in-flight mass in the mailbox — so drift means a bug, not a
+    regime.)"""
+    first: dict = {}
+    errors = []
+    for rec in recs:
+        mt = rec.get("mass_total")
+        if mt is None:
+            continue
+        key = (rec.get("run"), rec.get("algo"), rec.get("kind"))
+        ref = first.setdefault(key, mt)
+        if abs(mt - ref) > MASS_RTOL * max(abs(ref), 1.0):
+            errors.append(
+                f"{rec['kind']} step {rec['step']}: mass_total={mt!r} "
+                f"drifted from {ref!r} (rtol {MASS_RTOL:g})")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro.obs.report",
+        description="Render (and optionally gate) a telemetry JSONL run.")
+    ap.add_argument("jsonl", nargs="+", help="record file(s)")
+    ap.add_argument("--check", action="store_true",
+                    help="validate schema + mass ledger; exit 1 on drift")
+    ap.add_argument("--kind", default="",
+                    help="restrict to one record kind (round/tick/serve)")
+    args = ap.parse_args(argv)
+
+    recs: List[dict] = []
+    try:
+        for path in args.jsonl:
+            recs.extend(_record.load_jsonl(path))
+    except (OSError, ValueError) as e:
+        print(f"report: INVALID: {e}", file=sys.stderr)
+        return 1
+
+    if args.kind:
+        recs = [r for r in recs if r.get("kind") == args.kind]
+    if not recs:
+        print("report: no records", file=sys.stderr)
+        return 1
+
+    for kind in ("round", "tick"):
+        out = summarize_rounds([r for r in recs if r["kind"] == kind], kind)
+        if out:
+            print(out, end="")
+    out = summarize_serve([r for r in recs if r["kind"] == "serve"])
+    if out:
+        print(out, end="")
+
+    if args.check:
+        errors = check_mass(recs)
+        if errors:
+            print("report: MASS LEDGER DRIFT:", file=sys.stderr)
+            for e in errors:
+                print(f"  {e}", file=sys.stderr)
+            return 1
+        print(f"\nreport: OK — {len(recs)} records, schema "
+              f"v{_record.schema_of(recs)}, mass ledger conserved "
+              f"(rtol {MASS_RTOL:g})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,8 +1,13 @@
 """repro.serve — personalized inference against the trained buffer
 (docs/serve.md): one consensus trunk served once per mixed-user batch,
 per-request classifier rows gathered from the resident personal block."""
-from .engine import make_cnn_server, make_naive_server, serve_logits, \
-    serve_naive
+from .engine import (
+    ServeMeter,
+    make_cnn_server,
+    make_naive_server,
+    serve_logits,
+    serve_naive,
+)
 from .state import (
     CONSENSUS_MODES,
     ServingState,
@@ -11,7 +16,7 @@ from .state import (
 )
 
 __all__ = [
-    "CONSENSUS_MODES", "ServingState", "from_checkpoint",
+    "CONSENSUS_MODES", "ServeMeter", "ServingState", "from_checkpoint",
     "from_train_state", "make_cnn_server", "make_naive_server",
     "serve_logits", "serve_naive",
 ]

@@ -11,14 +11,24 @@ The naive baseline (`serve_naive`) is the seed-era shape of this path:
 every request evaluates its user's FULL model — m-replica params, one
 whole forward per request, the per-user vmap gather the fused path
 deletes.  `benchmarks/bench_serve.py` (E10) measures the gap.
+
+Serve telemetry (docs/observability.md §Serve): pass `meter=ServeMeter()`
+to the server factories and every call is timed end-to-end on the host
+(perf_counter + block_until_ready, the same discipline the bench uses),
+tagged fused/naive, and folded into rolling p50/p99/rps windows —
+optionally emitted per call as schema-v1 "serve" records through any
+obs.MetricsSink.  meter=None (default) returns the raw jitted closure:
+zero overhead, bit-identical dispatch.
 """
 from __future__ import annotations
 
 import functools
+import time
+from collections import deque
 
 import jax
-import jax.numpy as jnp
 
+from repro import obs
 from repro.kernels import ops
 from repro.models import cnn
 
@@ -30,23 +40,99 @@ def serve_logits(sstate, uid, x, model_cfg: cnn.CNNConfig,
     per-request head is the fused gather+matmul.  With the exact-
     consensus trunk (anchor mode) the result is bit-for-bit
     eval_params_flat's per-user evaluation (tests/test_serve.py)."""
-    h = cnn.features(sstate.trunk, x, model_cfg)
+    with jax.named_scope("serve.trunk"):
+        h = cnn.features(sstate.trunk, x, model_cfg)
     head = sstate.personal["classifier"]
-    return ops.head_gather_matmul(uid, h, head["w"], head["b"],
-                                  force=force, block_b=block_b)
+    with jax.named_scope("serve.head_gather"):
+        return ops.head_gather_matmul(uid, h, head["w"], head["b"],
+                                      force=force, block_b=block_b)
+
+
+class ServeMeter:
+    """Rolling serve-latency histogram keyed by (path, batch) tag.
+
+    Each `observe` folds one call's wall-clock into a bounded window
+    (last `window` calls per tag) and bumps the call counter; `stats`
+    renders nearest-rank p50/p99 latency plus median rps — the same
+    percentile definition `repro.obs.report` applies to the emitted
+    records, so live stats and offline rendering agree.  `sink` gets one
+    schema-v1 "serve" record per call (default NULL — in-memory only)."""
+
+    def __init__(self, sink=None, window: int = 1024, run: str = "serve"):
+        self.sink = sink if sink is not None else obs.NULL_SINK
+        self.window = int(window)
+        self.run = run
+        self._lat: dict = {}     # (path, batch) -> deque of latency_ms
+        self._n: dict = {}       # (path, batch) -> total calls
+        self._step = 0
+
+    def observe(self, path: str, batch: int, latency_s: float) -> None:
+        key = (path, int(batch))
+        ms = latency_s * 1e3
+        self._lat.setdefault(key, deque(maxlen=self.window)).append(ms)
+        self._n[key] = self._n.get(key, 0) + 1
+        self._step += 1
+        self.sink.emit(obs.serve_record(
+            run=self.run, step=self._step, path=path, batch=int(batch),
+            latency_ms=ms, rps=(batch / latency_s if latency_s > 0
+                                else None)))
+
+    def latencies(self, path: str, batch: int) -> list:
+        """The rolling window's raw per-call latencies (ms) for one tag —
+        benches compute their own best-of/percentile stats from these."""
+        return list(self._lat.get((path, int(batch)), ()))
+
+    def clear(self, path: str, batch: int) -> None:
+        """Drop one tag's window (e.g. discard warmup calls); the total
+        call counter keeps counting."""
+        self._lat.get((path, int(batch)), deque()).clear()
+
+    def stats(self) -> list:
+        """-> [{path, batch, calls, p50_ms, p99_ms, rps}] sorted by tag,
+        over each tag's rolling window."""
+        from repro.obs.report import percentile
+        rows = []
+        for (path, batch), lats in sorted(self._lat.items()):
+            xs = list(lats)
+            if not xs:      # window cleared (e.g. warmup discard)
+                continue
+            p50 = percentile(xs, 50)
+            rows.append({
+                "path": path, "batch": batch, "calls": self._n[(path, batch)],
+                "p50_ms": p50, "p99_ms": percentile(xs, 99),
+                "rps": (batch / (p50 * 1e-3)) if p50 > 0 else None,
+            })
+        return rows
+
+
+def _metered(serve_fn, meter: ServeMeter, path: str):
+    """Wrap a jitted serve closure with host-side timing: dispatch, block
+    on the logits, observe.  The blocking makes the number mean device
+    latency (not dispatch) — callers needing async pipelining should keep
+    meter=None and meter at their own sync points."""
+    def timed(uid, x):
+        t0 = time.perf_counter()
+        out = serve_fn(uid, x)
+        jax.block_until_ready(out)
+        meter.observe(path, uid.shape[0], time.perf_counter() - t0)
+        return out
+
+    return timed
 
 
 def make_cnn_server(sstate, model_cfg: cnn.CNNConfig,
-                    force: str = "auto", block_b: int | None = None):
+                    force: str = "auto", block_b: int | None = None,
+                    meter: ServeMeter | None = None):
     """-> jitted serve(uid, x) -> (B, n) f32 logits closure over the
     resident serving state (the state rides as a captured constant, so
-    repeated calls at one batch shape reuse one trace)."""
+    repeated calls at one batch shape reuse one trace).  meter: optional
+    ServeMeter — calls are then timed and tagged path="fused"."""
     @jax.jit
     def serve(uid, x):
         return serve_logits(sstate, uid, x, model_cfg,
                             force=force, block_b=block_b)
 
-    return serve
+    return serve if meter is None else _metered(serve, meter, "fused")
 
 
 def serve_naive(models, uid, x, model_cfg: cnn.CNNConfig):
@@ -61,8 +147,11 @@ def serve_naive(models, uid, x, model_cfg: cnn.CNNConfig):
     return jax.vmap(one)(uid, x)
 
 
-def make_naive_server(models, model_cfg: cnn.CNNConfig):
+def make_naive_server(models, model_cfg: cnn.CNNConfig,
+                      meter: ServeMeter | None = None):
     """Jitted form of `serve_naive` (the bench times both engines through
-    one dispatch boundary)."""
-    return jax.jit(functools.partial(serve_naive, models,
-                                     model_cfg=model_cfg))
+    one dispatch boundary).  meter: optional ServeMeter — calls are then
+    timed and tagged path="naive"."""
+    serve = jax.jit(functools.partial(serve_naive, models,
+                                      model_cfg=model_cfg))
+    return serve if meter is None else _metered(serve, meter, "naive")

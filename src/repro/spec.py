@@ -54,6 +54,7 @@ class AlgoSpec:
     participation: str = "full"     # full | uniform | trace
     participation_frac: float = 1.0
     block_m: Optional[int] = None   # pallas DMA-panel knob (pallas only)
+    telemetry: bool = False         # in-graph round gauges (repro.obs)
 
     def __post_init__(self):
         if self.topology not in topology.TopologySchedule.KINDS:
@@ -101,6 +102,11 @@ class AlgoSpec:
             raise ValueError(
                 "wire codecs live on the resident flat buffer; "
                 "resident=False has no payload boundary")
+        if self.telemetry and not self.resident:
+            raise ValueError(
+                "telemetry gauges (repro.obs) read the resident "
+                "(m, d_flat) buffer; resident=False has no buffer to "
+                "gauge — enable resident or drop telemetry")
 
     # -- name -> object resolution (the registries) -----------------------
     def schedule(self, m: int) -> topology.TopologySchedule:

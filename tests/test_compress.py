@@ -552,14 +552,34 @@ def test_wire_meter_sync_equals_async():
     async regime fires exactly once per sync-equivalent window over the
     same seeded schedule family, so cumulative bytes must agree EXACTLY —
     uncompressed, identity, and lossy (where BOTH meters count the
-    tracked-reference bootstrap rows on top of the per-edge payloads)."""
+    tracked-reference bootstrap rows on top of the per-edge payloads).
+
+    Since PR 8 both meters are the SAME arithmetic —
+    obs.gauges.payload_row_bytes / bootstrap_bytes / edge_count — and the
+    per-round records emitted through the telemetry sink carry the same
+    cumulative counter the history lists do, so the emitted records are
+    pinned against the histories here too (one source, three readouts)."""
+    from repro import obs
+
     base = SimConfig(m=6, rounds=4, n_neighbors=2, n_train=16, n_test=8,
                      batch=8, k_local=2, k_personal=1, hetero="uniform",
                      push_delay_max=0, availability=1.0)
     for codec, gamma in ((None, 1.0), ("identity", 1.0), ("topk", 0.5)):
         sim = dataclasses.replace(base, codec=codec, codec_gamma=gamma)
-        h_sync = run_experiment("dfedpgp", sim, eval_every=2)
+        ring_s, ring_a = obs.RingSink(), obs.RingSink()
+        h_sync = run_experiment("dfedpgp", sim, eval_every=2, sink=ring_s)
         h_async = run_experiment("dfedpgp", dataclasses.replace(
-            sim, runtime="async"), eval_every=2)
+            sim, runtime="async"), eval_every=2, sink=ring_a)
         assert h_sync["wire_bytes"] == h_async["wire_bytes"], \
             (codec, h_sync["wire_bytes"], h_async["wire_bytes"])
+        # the sink records carry the same counter as the history lists
+        for ring, kind, h in ((ring_s, "round", h_sync),
+                              (ring_a, "tick", h_async)):
+            recs = [r for r in ring.records if r["kind"] == kind]
+            assert len(recs) == base.rounds
+            for r in recs:
+                obs.record.validate(r)
+            assert recs[-1]["wire_bytes"] == h["wire_bytes"][-1], codec
+        # sync and async records agree step-by-step, not only cumulatively
+        assert [r["wire_bytes"] for r in ring_s.records] == \
+            [r["wire_bytes"] for r in ring_a.records], codec
