@@ -63,15 +63,17 @@ def _timeit(fn, *args, iters=10):
     """Best-of-N wall time: the MIN over per-call timings.  The min is the
     noise-robust estimator for a deterministic computation — scheduler
     jitter and background load only ever ADD time — which keeps the CI
-    bench-regression ratios (check_regression.py) stable across runners."""
-    out = fn(*args)
-    jax.block_until_ready(out)
+    bench-regression ratios (check_regression.py) stable across runners.
+    Each call is one obs.PhaseTimer block=True phase (the one
+    device-blocking timing path, docs/observability.md §Profiling)."""
+    from repro.obs import PhaseTimer
+    jax.block_until_ready(fn(*args))     # warmup / compile
     best = float("inf")
     for _ in range(iters):
-        t0 = time.perf_counter()
-        out = fn(*args)
-        jax.block_until_ready(out)
-        best = min(best, time.perf_counter() - t0)
+        pt = PhaseTimer()
+        with pt.phase("call", block=True) as ph:
+            ph.out = fn(*args)
+        best = min(best, pt.seconds("call"))
     return best
 
 

@@ -120,13 +120,16 @@ def _time_rounds(step, iters):
     """Best-of-N wall time of one full round including host-side per-round
     work (sampler draw, key fold) — the quantity rounds/sec reports.  The
     step carries the (donated) resident buffer round to round, like
-    training does."""
+    training does.  Each round is one obs.PhaseTimer block=True phase
+    (the one device-blocking timing path)."""
+    from repro.obs import PhaseTimer
     step(0)                                  # compile + warm sampler
     best = float("inf")
     for r in range(1, iters + 1):
-        t0 = time.perf_counter()
-        jax.block_until_ready(step(r))
-        best = min(best, time.perf_counter() - t0)
+        pt = PhaseTimer()
+        with pt.phase("round", block=True) as ph:
+            ph.out = step(r)
+        best = min(best, pt.seconds("round"))
     return best
 
 

@@ -81,7 +81,7 @@ BASELINE_SERVE = ROOT / "BENCH_serve.json"
 # with NO stamp are pre-PR-8 (v0 legacy) and read fine; artifacts
 # stamped NEWER than this fail loudly rather than being half-parsed
 # (tests/test_obs.py pins the two numbers equal).
-SUPPORTED_SCHEMA = 1
+SUPPORTED_SCHEMA = 2
 
 RATIO_FLOOR = 0.7        # fresh speedup may drop to 70% of baseline
 # The baseline artifact is committed from one machine and CI runs on

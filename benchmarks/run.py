@@ -9,6 +9,8 @@
   E8     bench_compress    accuracy vs cumulative wire bytes (§Compression)
   E9     bench_scale       sampled resident round vs all-rows (§Scale)
   E10    bench_serve       fused mixed-user serving vs m-replica (§Serve)
+  E11    bench_graph       runtime contraction estimate vs topology kind
+                           (§Graph diagnostics)
   G1     bench_gossip      sparse vs dense gossip-step wall time (§Perf)
   R1     roofline          three-term roofline from the dry-run artifacts
 
@@ -39,16 +41,16 @@ def main(argv=None):
     from repro.obs import maybe_trace
 
     from . import (bench_ablation, bench_accuracy, bench_async,
-                   bench_compress, bench_gossip, bench_hetero,
-                   bench_neighbors, bench_scale, bench_serve,
-                   bench_topology, roofline)
+                   bench_compress, bench_gossip, bench_graph,
+                   bench_hetero, bench_neighbors, bench_scale,
+                   bench_serve, bench_topology, roofline)
 
     suites = [("E1", bench_accuracy), ("E3", bench_hetero),
               ("E4", bench_ablation), ("E5", bench_neighbors),
               ("E6", bench_topology), ("E7", bench_async),
               ("E8", bench_compress), ("E9", bench_scale),
-              ("E10", bench_serve), ("G1", bench_gossip),
-              ("R1", roofline)]
+              ("E10", bench_serve), ("E11", bench_graph),
+              ("G1", bench_gossip), ("R1", roofline)]
     t0 = time.perf_counter()
     failures = 0
     with maybe_trace(args.profile or None):

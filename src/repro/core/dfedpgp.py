@@ -353,19 +353,23 @@ class DFedPGP:
             return self.codec_gamma
         return jnp.clip(obs_gauges.ef_signal_ratio(flat, ef), 0.05, 1.0)
 
-    def _round_gauges(self, *, flat, mu, upd_before, upd_after, ef_pre,
-                      grad_norm, P, active_mask=None):
+    def _round_gauges(self, *, flat, mu, mu_pre, upd_before, upd_after,
+                      ef_pre, grad_norm, P, active_mask=None):
         """The telemetry=True aux pack of the resident rounds (repro.obs,
         docs/observability.md §Gauges): pure f32 reductions over the
         post-round buffer — consensus gap, mass ledger, grad/update norms,
-        wire edges, and (lossy codecs) the EF signal ratio the "auto"
-        anneal reads.  Never touches the state that flows on."""
+        wire edges, moved mass, and (lossy codecs) the EF signal ratio
+        the "auto" anneal reads.  Never touches the state that flows on.
+        mu_pre: the PRE-mix push-sum weights — the mass that was in
+        motion this round (obs.graph.moved_mass)."""
+        from repro.obs import graph as obs_graph
         g = dict(obs_gauges.consensus_gap(flat, mu))
         g.update(obs_gauges.mass_ledger(mu, active_mask))
         g["update_norm"] = obs_gauges.buffer_update_norm(upd_before,
                                                          upd_after)
         g["grad_norm"] = grad_norm
         g["wire_edges"] = obs_gauges.wire_edges(P)
+        g["moved_mass"] = obs_graph.moved_mass(P, mu_pre)
         if ef_pre is not None:
             # same working set as _gamma_value: post-local signal vs the
             # residual the mix is about to drain
@@ -555,7 +559,7 @@ class DFedPGP:
                    "mu_min": jnp.min(mu), "mu_max": jnp.max(mu)}
         if self.telemetry:
             metrics.update(self._round_gauges(
-                flat=flat, mu=mu, upd_before=state.flat,
+                flat=flat, mu=mu, mu_pre=state.mu, upd_before=state.flat,
                 upd_after=flat_local, ef_pre=state.ef,
                 grad_norm=jnp.mean(aux[2]), P=P))
         return new_state, metrics
@@ -623,6 +627,7 @@ class DFedPGP:
                         batches["v"], batches["u"], step_gate_u)
         loss_v, loss_u = aux[0], aux[1]
         flat_local = flat_a   # post-local / pre-mix compact rows
+        mu_pre = mu_a         # pre-mix compact mu (moved-mass gauge)
         ef_pre = take(state.ef) if self.codec is not None else None
 
         with jax.named_scope("dfedpgp.mix"):
@@ -674,7 +679,7 @@ class DFedPGP:
             active_mask = jnp.zeros(state.mu.shape, bool).at[active].set(
                 True)
             metrics.update(self._round_gauges(
-                flat=flat, mu=mu, upd_before=flat_pre,
+                flat=flat, mu=mu, mu_pre=mu_pre, upd_before=flat_pre,
                 upd_after=flat_local, ef_pre=ef_pre,
                 grad_norm=jnp.mean(aux[2]), P=P_act,
                 active_mask=active_mask))

@@ -450,14 +450,13 @@ def run_experiment(algo_name: str, sim: SimConfig,
                 gate[:, :k_total]
         else:
             gate_u = None
-        with timer.phase("round"):
+        with timer.phase("round", block=sink is not None) as ph:
             if active is not None:
                 state, metrics = round_sampled_jit(state, P_act, active,
                                                    batches, gate_u)
             else:
                 state, metrics = round_jit(state, ctx, batches, gate_u)
-            if sink is not None:
-                jax.block_until_ready(metrics)
+            ph.out = metrics
 
         acc = None
         if (r + 1) % eval_every == 0 or r == sim.rounds - 1:
@@ -484,6 +483,14 @@ def run_experiment(algo_name: str, sim: SimConfig,
                 **{k: v for k, v in metrics.items()
                    if jnp.ndim(v) == 0}))
             timer.reset()
+            if sp.graph_every and (r + 1) % sp.graph_every == 0 \
+                    and schedule is not None and use_flat:
+                from repro.obs import graph as obs_graph
+                obs_graph.emit_graph_record(
+                    sink, run_id=run_id, algo=algo_name, m=sim.m,
+                    seed=sim.seed, schedule=schedule, step=r + 1, t0=r,
+                    flat=state.flat, mu=state.mu,
+                    personal=state.personal, active=active)
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     if return_params:
         history["params"] = eval_params(state)
@@ -576,12 +583,11 @@ def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
     tick = 0
     wire_edges = jnp.zeros((), jnp.int32)
     for r in range(sim.rounds):
-        with timer.phase("window"):
+        with timer.phase("window", block=sink is not None) as ph:
             state, metrics, tick, wire_edges = async_round(
                 runtime, tick_fn, state, schedule, data, sim, k_run, tick,
                 wire_edges, sampler=sampler)
-            if sink is not None:
-                jax.block_until_ready(metrics)
+            ph.out = metrics
         acc = None
         if (r + 1) % eval_every == 0 or r == sim.rounds - 1:
             with timer.phase("eval"):
@@ -608,6 +614,27 @@ def async_experiment(algo_name: str, sim: SimConfig, model_cfg, data,
                 **{k: v for k, v in metrics.items()
                    if jnp.ndim(v) == 0}))
             timer.reset()
+            if sp.graph_every and (r + 1) % sp.graph_every == 0:
+                # snapshot the IN-FLIGHT-AWARE ledger (flat + mail,
+                # mu + mail) — the same accounting eval_params uses, so
+                # a client whose mass is mid-wire still reads correctly.
+                # mass_total over mu_eff is the conserved local+in-flight
+                # total; the age histogram keys off the last executed
+                # tick, so every ring slot (delta 1..D) is covered.
+                from repro.hetero import mailbox as a_mbox
+                from repro.obs import graph as obs_graph
+                mail_f, mail_mu = a_mbox.in_flight(state.mail)
+                extra = dict(obs_gauges.staleness_gauges(
+                    state.local_round))
+                extra.update(obs_graph.mailbox_age_hist(
+                    state.mail.slots_mu, tick - 1))
+                obs_graph.emit_graph_record(
+                    sink, run_id=run_id, algo=algo_name, m=sim.m,
+                    seed=sim.seed, schedule=schedule, step=r + 1,
+                    t0=tick, flat=state.flat + mail_f.astype(
+                        state.flat.dtype),
+                    mu=state.mu + mail_mu, personal=state.personal,
+                    extra=extra)
     history["final_acc"] = history["acc"][-1] if history["acc"] else float("nan")
     if return_params:
         history["params"] = runtime.eval_params(state)

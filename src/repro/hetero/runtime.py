@@ -253,6 +253,7 @@ class AsyncRuntime:
             mail, ef, ref = jax.lax.cond(
                 jnp.any(fired), fire_push, lambda c: c,
                 (mail, state.ef, state.ref))
+        mu_at_fire = mu       # pre-zeroing mu: the mass each fire pushed
         flat = jnp.where(fired[:, None], 0.0, flat)
         mu = jnp.where(fired, 0.0, mu)
 
@@ -297,6 +298,12 @@ class AsyncRuntime:
             if state.ef is not None:
                 metrics["ef_ratio"] = obs_gauges.ef_signal_ratio(
                     flat_pre_step, state.ef)
+            # per-tick moved mass over the topology that actually fired
+            # (γ-blended P under a lossy codec — the wire P): what the
+            # graph records' per-edge attribution sums to
+            from repro.obs import graph as obs_graph
+            metrics["moved_mass"] = obs_graph.moved_mass(
+                P, mu_at_fire, fired=fired)
         new_state = AsyncState(flat, personal, mu, opt_u, opt_v, phase,
                                local_round, clk, mail, ef, ref)
         return new_state, metrics

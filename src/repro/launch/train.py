@@ -62,7 +62,8 @@ def make_cli_spec(args, gossip: str):
         "dfedpgp", topology=kind, n_neighbors=args.neighbors,
         seed=args.seed, gossip=gossip, resident=args.resident,
         participation="uniform" if args.sample < 1.0 else "full",
-        participation_frac=args.sample, telemetry=args.telemetry)
+        participation_frac=args.sample, telemetry=args.telemetry,
+        graph_every=args.graph_every)
 
 
 def main(argv=None):
@@ -98,6 +99,12 @@ def main(argv=None):
                     help="in-graph round gauges (repro.obs; needs "
                          "--resident): consensus gap, mass ledger, "
                          "grad/update norms ride the round metrics")
+    ap.add_argument("--graph-every", type=int, default=0,
+                    help="emit one schema-v2 collaboration-graph record "
+                         "every N rounds (repro.obs.graph; needs "
+                         "--telemetry): contraction estimate, top-k edge "
+                         "attribution, similarity gauges — render with "
+                         "`report <metrics> --graph`")
     ap.add_argument("--metrics", default="",
                     help="JSONL path: emit one schema-v1 round record per "
                          "round through obs.JsonlSink (render with "
@@ -135,6 +142,9 @@ def main(argv=None):
     if args.telemetry and not args.resident:
         ap.error("--telemetry gauges read the resident flat buffer; "
                  "add --resident")
+    if args.graph_every and not args.telemetry:
+        ap.error("--graph-every emits through the telemetry spine; "
+                 "add --telemetry")
     spec = make_cli_spec(args, gossip)
     # the spec is the run's one knob object: the schedule the round loop
     # mixes over and the sampler it draws from resolve from the SAME spec
@@ -207,7 +217,8 @@ def main(argv=None):
                                         (n_lead, args.k_u, args.batch),
                                         args.seq),
                 }
-            with timer.phase("round"):
+            active = None
+            with timer.phase("round", block=True) as ph:
                 if sampler is not None:
                     active = jnp.asarray(sampler.active_at(r))
                     P_r = topology.induced_subgraph(schedule.at(r), active,
@@ -216,7 +227,8 @@ def main(argv=None):
                 else:
                     P_r = schedule.at(r)
                     state, metrics = round_fn(state, P_r, batches)
-                metrics = jax.device_get(metrics)
+                ph.out = metrics
+            metrics = jax.device_get(metrics)
             wire_total += obs_gauges.edge_count(P_r) * wire_rb
             rec = obs.round_record(
                 run=run_id, algo="dfedpgp", step=r, m=m,
@@ -225,6 +237,13 @@ def main(argv=None):
                 **{k: v for k, v in metrics.items() if jnp.ndim(v) == 0})
             timer.reset()
             sink.emit(rec)
+            if args.graph_every and (r + 1) % args.graph_every == 0:
+                from repro.obs import graph as obs_graph
+                obs_graph.emit_graph_record(
+                    sink, run_id=run_id, algo="dfedpgp", m=m,
+                    seed=args.seed, schedule=schedule, step=r, t0=r,
+                    flat=state.flat, mu=state.mu,
+                    personal=state.personal, active=active)
             print(f"[train] {obs.record.render(rec)} "
                   f"loss_v={rec['loss_v']:.4f} "
                   f"mu=[{rec['mu_min']:.3f},{rec['mu_max']:.3f}]")

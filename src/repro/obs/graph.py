@@ -1,0 +1,347 @@
+"""Collaboration-graph gauges (docs/observability.md §Graph diagnostics).
+
+The paper's convergence constant is driven by the connectivity term
+Gamma(W) of the directed mixing schedule — a property of the GRAPH, not
+of any single client.  The PR 8 spine only sees aggregate health
+(consensus gap, mass ledger, wire bytes); this module adds the graph's
+runtime face:
+
+  contraction_estimate   power-iteration estimate of the mixing window's
+                         disagreement contraction factor (the operational
+                         Gamma(W)), computed directly on the
+                         SparseTopology neighbor tables — including the
+                         induced subgraph under partial participation
+  edge_mass_flow         per-edge push-sum mass attribution (who moves
+                         mass to whom); `moved_mass` is its total and is
+                         pinned against the round's mass movement in
+                         tests/test_obs_graph.py, sync AND async
+  edge_delta_attribution de-biased received-value attribution per
+                         in-edge: w[i,j] * ||z_j|| — which edges carry
+                         USEFUL model mass, the top-k drill-down of
+                         `report --graph`
+  degree_utilization     per-client in/out-degree load of the realized
+                         edge set
+  row_cosine /           resident-buffer similarity gauges — the runtime
+  pairwise_distance      inputs a LEARNED collaboration graph (Dada,
+                         PAPERS.md; ROADMAP "learned collaboration
+                         graphs") would score edges with
+  mailbox_age_hist       per-slot in-flight mass by ticks-to-delivery —
+                         the async runtime's staleness histogram
+
+Everything above the host-helpers line is jit-safe and PURE (reads only;
+the state that flows on is never touched), so the gauges ride the same
+static `AlgoSpec.telemetry` / `graph_every` gates as the PR 8 gauges:
+off means bit-for-bit the uninstrumented program.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.topology import SparseTopology
+from repro.obs import record as _record
+
+# floor for renormalizing probe vectors: anything at or below f32 noise
+# means the window reached exact consensus (full graph / a complete
+# exponential window) and the estimate should read ~0, not 0/0
+_EPS = 1e-30
+
+
+# ---------------------------------------------------------------------------
+# connectivity: power-iteration contraction estimate
+# ---------------------------------------------------------------------------
+def contraction_estimate(topos: Sequence[SparseTopology], key,
+                         n_probes: int = 4, sweeps: int = 2) -> jnp.ndarray:
+    """Per-application contraction factor of a WINDOW of mixing patterns
+    on the disagreement subspace — the runtime face of Gamma(W).
+
+    Applies every topology in `topos` (in order, `sweeps` times) to
+    `n_probes` random mean-centered probe vectors, re-centering and
+    re-normalizing after each application, and returns the geometric mean
+    of the per-application norm ratios, maxed over probes (the power
+    iteration converges the probes toward the slowest-mixing
+    disagreement mode).  In f32:
+
+      full graph    ~0        (one application reaches exact consensus)
+      exponential   small     (the one-peer window multiplies out to the
+                               exact full average — hypercube allreduce)
+      ring          ~cos(pi/m) (the classic slow ring spectrum)
+
+    so tighter connectivity reads as a SMALLER estimate, matching the
+    paper's tighter-graph-faster-rate claim (tests/test_obs_graph.py pins
+    full < exponential < ring at m=64).
+
+    `topos` must be a static-length sequence with uniform (m, k) shapes —
+    one schedule window (ring/full: 1 round; exponential: its log2(m)
+    B-window; random kinds: any representative window).  Induced
+    subgraphs under sampling work unchanged: pass the induced window.
+    Jit-safe: topologies enter as pytree arguments."""
+    topos = tuple(topos)
+    if not topos:
+        raise ValueError("contraction_estimate needs >= 1 topology")
+    m = topos[0].idx.shape[0]
+    x = jax.random.normal(key, (m, n_probes), jnp.float32)
+    x = x - jnp.mean(x, axis=0, keepdims=True)
+    x = x / jnp.maximum(jnp.linalg.norm(x, axis=0), _EPS)[None, :]
+    log_rho = jnp.zeros((n_probes,), jnp.float32)
+    for _ in range(int(sweeps)):
+        for P in topos:
+            x = P @ x
+            x = x - jnp.mean(x, axis=0, keepdims=True)
+            n = jnp.linalg.norm(x, axis=0)
+            log_rho = log_rho + jnp.log(jnp.maximum(n, _EPS))
+            x = x / jnp.maximum(n, _EPS)[None, :]
+    n_apply = int(sweeps) * len(topos)
+    return jnp.max(jnp.exp(log_rho / n_apply))
+
+
+# ---------------------------------------------------------------------------
+# per-edge attribution
+# ---------------------------------------------------------------------------
+def edge_mass_flow(P: SparseTopology, mu: jnp.ndarray,
+                   fired: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """(m, k) push-sum mass moved along each directed NON-SELF edge this
+    round: flow[i, p] = w[i, p] * mu[idx[i, p]] — receiver i's pull (sync
+    row-stochastic form) or the sender's pushed share (async
+    column-stochastic form, with `fired` gating the senders that actually
+    transmitted this tick).  Self edges are zero: retained mass never
+    rides the wire.
+
+    mu must be the PRE-mix (sync) / pre-zero at-fire (async) weights —
+    the mass that was actually in motion.  The total is `moved_mass`;
+    tests/test_obs_graph.py pins it against the independently-accounted
+    mass movement of both regimes at f32 tolerance.
+
+    Like gauges.wire_edges, accepts a dense (m, m) mixing matrix too —
+    the resident round's mix_fn override path hands the gauge whatever
+    form the round actually mixed with."""
+    if not isinstance(P, SparseTopology):
+        m = P.shape[0]
+        flow = P.astype(jnp.float32) * mu.astype(jnp.float32)[None, :]
+        flow = jnp.where(jnp.eye(m, dtype=bool), 0.0, flow)
+        if fired is not None:
+            flow = flow * fired.astype(flow.dtype)[None, :]
+        return flow
+    m = P.idx.shape[0]
+    rows = jnp.arange(m, dtype=P.idx.dtype)[:, None]
+    flow = P.w * jnp.take(mu.astype(jnp.float32), P.idx, axis=0)
+    flow = jnp.where(P.idx == rows, 0.0, flow)
+    if fired is not None:
+        flow = flow * jnp.take(fired, P.idx, axis=0).astype(flow.dtype)
+    return flow
+
+
+def moved_mass(P: SparseTopology, mu: jnp.ndarray,
+               fired: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Scalar f32: total push-sum mass that crossed a wire this round —
+    the sum of `edge_mass_flow`."""
+    return jnp.sum(edge_mass_flow(P, mu, fired))
+
+
+def edge_delta_attribution(P: SparseTopology, flat: jnp.ndarray,
+                           mu: jnp.ndarray) -> jnp.ndarray:
+    """(m, k) de-biased received-VALUE attribution per in-edge:
+    w[i, p] * ||z_j||, z_j = u_j / mu_j — how much useful model mass each
+    edge delivers to its receiver (self edges zero).  This is the
+    influence score `report --graph` ranks for the top-k edge drill-down,
+    and the shape a learned-graph schedule would re-weight.  mu is
+    floored at _EPS: a just-fired async client holds (0, 0) until its
+    mail lands, and 0/0 here would poison the attribution with NaN."""
+    m = P.idx.shape[0]
+    z = flat.astype(jnp.float32) / jnp.maximum(
+        mu[:, None].astype(jnp.float32), _EPS)
+    znorm = jnp.sqrt(jnp.sum(jnp.square(z), axis=1))      # (m,)
+    rows = jnp.arange(m, dtype=P.idx.dtype)[:, None]
+    att = P.w * jnp.take(znorm, P.idx, axis=0)
+    return jnp.where(P.idx == rows, 0.0, att)
+
+
+def degree_utilization(P: SparseTopology) -> dict:
+    """Per-client degree load of the realized non-self edge set:
+    in-degree (how many peers client i pulls from / receives pushes of)
+    and out-degree (how many peers reference client i).  `starved_frac`
+    is the fraction of clients with ZERO in-edges — under sampling or a
+    degenerate schedule these clients receive nothing and drift, which is
+    one input of the flight recorder's dead-client detector."""
+    m = P.idx.shape[0]
+    rows = jnp.arange(m, dtype=P.idx.dtype)[:, None]
+    real = (P.w > 0) & (P.idx != rows)                    # (m, k) non-self
+    in_deg = jnp.sum(real, axis=1).astype(jnp.float32)    # (m,)
+    out_deg = jnp.zeros((m,), jnp.float32).at[P.idx.reshape(-1)].add(
+        real.astype(jnp.float32).reshape(-1))
+    return {
+        "in_degree_mean": jnp.mean(in_deg),
+        "in_degree_min": jnp.min(in_deg),
+        "out_degree_mean": jnp.mean(out_deg),
+        "out_degree_max": jnp.max(out_deg),
+        "starved_frac": jnp.mean((in_deg <= 0).astype(jnp.float32)),
+    }
+
+
+# ---------------------------------------------------------------------------
+# resident-buffer similarity (the learned-graph inputs)
+# ---------------------------------------------------------------------------
+def row_cosine(flat: jnp.ndarray, mu: jnp.ndarray, key,
+               n_pairs: int = 64) -> dict:
+    """Sampled pairwise cosine similarity of the DE-BIASED shared rows
+    z_i = u_i / mu_i: `n_pairs` uniform (i, j) client pairs, i != j by
+    construction (the j draw skips i).  High mean cosine = the shared
+    representations agree; a falling minimum flags a diverging clique.
+    These are exactly the row-space scores a Dada-style learned schedule
+    would turn into edge weights (ROADMAP learned collaboration
+    graphs)."""
+    m = flat.shape[0]
+    z = flat.astype(jnp.float32) / jnp.maximum(
+        mu[:, None].astype(jnp.float32), _EPS)
+    ki, kj = jax.random.split(key)
+    i = jax.random.randint(ki, (n_pairs,), 0, m)
+    j_raw = jax.random.randint(kj, (n_pairs,), 0, max(m - 1, 1))
+    j = jnp.where(j_raw >= i, j_raw + 1, j_raw) % m       # skip self
+    zi, zj = z[i], z[j]
+    dot = jnp.sum(zi * zj, axis=1)
+    nn = jnp.linalg.norm(zi, axis=1) * jnp.linalg.norm(zj, axis=1)
+    cos = dot / jnp.maximum(nn, _EPS)
+    return {"row_cos_mean": jnp.mean(cos), "row_cos_min": jnp.min(cos)}
+
+
+def pairwise_distance(rows: jnp.ndarray, key, n_pairs: int = 64,
+                      prefix: str = "head_dist") -> dict:
+    """Sampled pairwise L2 distance over per-client rows (m, d) — applied
+    to the stacked personal classifier heads it measures how far the
+    PERSONAL parts have specialized (the second Dada input: personalized
+    heads far apart should not be forced to collaborate)."""
+    m = rows.shape[0]
+    r = rows.astype(jnp.float32)
+    ki, kj = jax.random.split(key)
+    i = jax.random.randint(ki, (n_pairs,), 0, m)
+    j_raw = jax.random.randint(kj, (n_pairs,), 0, max(m - 1, 1))
+    j = jnp.where(j_raw >= i, j_raw + 1, j_raw) % m
+    d = jnp.sqrt(jnp.sum(jnp.square(r[i] - r[j]), axis=1))
+    return {f"{prefix}_mean": jnp.mean(d), f"{prefix}_max": jnp.max(d)}
+
+
+def stack_client_rows(tree) -> jnp.ndarray:
+    """Flatten a stacked (m, ...) pytree (e.g. the personal classifier
+    leaves) into per-client rows (m, d_total) for `pairwise_distance`.
+    None leaves (the empty shared slots of the personal tree) are
+    skipped."""
+    leaves = [l for l in jax.tree.leaves(tree) if l is not None]
+    if not leaves:
+        raise ValueError("stack_client_rows: no non-None leaves")
+    m = leaves[0].shape[0]
+    return jnp.concatenate(
+        [l.reshape(m, -1).astype(jnp.float32) for l in leaves], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# async: mailbox staleness histogram
+# ---------------------------------------------------------------------------
+def mailbox_age_hist(slots_mu: jnp.ndarray, tick) -> dict:
+    """Per-slot in-flight mass keyed by ticks-until-delivery: slot
+    (tick + delta) mod D holds the mass arriving delta ticks from now
+    (delta in [1, D] — a push always rides the wire for >= 1 tick;
+    `mailbox.flush` already emptied the delta=0 slot this tick).  The
+    ring depth D is static, so the emitted field set
+    `mail_age<delta>_mass` is stable across ticks — the per-edge
+    staleness histogram of docs/observability.md §Graph diagnostics."""
+    depth = slots_mu.shape[0]
+    out = {}
+    for delta in range(1, depth + 1):
+        slot = jnp.mod(jnp.asarray(tick) + delta, depth)
+        out[f"mail_age{delta}_mass"] = jnp.sum(
+            jnp.take(slots_mu, slot, axis=0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# host helpers (numpy; encode per-edge arrays into record-safe strings)
+# ---------------------------------------------------------------------------
+def top_edges(P, attribution, k: int = 8) -> str:
+    """Encode the k highest-attribution directed edges as the compact
+    string 'j->i:val|...' (sender -> receiver) — records only carry JSON
+    scalars (record.validate), so per-edge data crosses as one string
+    field that `report --graph` parses back for the drill-down."""
+    import numpy as np
+    idx = np.asarray(P.idx)
+    att = np.asarray(attribution, np.float64)
+    m = idx.shape[0]
+    rows = np.arange(m)[:, None]
+    att = np.where(idx == rows, 0.0, att)
+    flat_order = np.argsort(-att, axis=None)[:max(int(k), 1)]
+    parts = []
+    for f in flat_order:
+        i, p = divmod(int(f), att.shape[1])
+        if att[i, p] <= 0.0:
+            break
+        parts.append(f"{int(idx[i, p])}->{i}:{att[i, p]:.4g}")
+    return "|".join(parts)
+    # the jax-free inverse (report --graph's drill-down parser) lives in
+    # report.parse_edges — report must import without a device runtime
+
+
+# ---------------------------------------------------------------------------
+# the one snapshot + emit driver both regimes call (sync simulator, async
+# simulator, launch/train.py)
+# ---------------------------------------------------------------------------
+# window length for the contraction estimate on APERIODIC (random)
+# schedules — periodic kinds use their own B-window (schedule.period)
+GRAPH_WINDOW = 4
+
+
+@functools.partial(jax.jit, static_argnames=("with_personal",))
+def _snapshot(flat, mu, personal, P, window, key, with_personal):
+    """The jitted graph snapshot: contraction over the schedule window,
+    degree load, similarity gauges, and the per-edge attribution array
+    (returned raw; the host encodes it via `top_edges`).  A SEPARATE
+    program from the round — the round trace never changes, so
+    graph_every=0 stays bit-for-bit the uninstrumented run."""
+    kc, ks = jax.random.split(key)
+    g = {"contraction": contraction_estimate(window, kc),
+         "moved_mass": moved_mass(P, mu)}
+    g.update(degree_utilization(P))
+    g.update(row_cosine(flat, mu, ks))
+    if with_personal:
+        g.update(pairwise_distance(stack_client_rows(personal), ks))
+    att = edge_delta_attribution(P, flat, mu)
+    return g, att
+
+
+def emit_graph_record(sink, *, run_id, algo, m, seed, schedule, step, t0,
+                      flat, mu, personal, active=None, extra=None):
+    """Emit one kind="graph" record (schema v2): the window [t0, t0+W)
+    of the run's schedule (W = schedule.period, or GRAPH_WINDOW for the
+    aperiodic random kinds), snapshotted against the CURRENT buffer.
+
+    Under partial participation the window is induced on the round's
+    active set (sum-preserving row renorm — the same subgraph the
+    sampled round mixed) and the buffer rows are gathered to the compact
+    id space, so the ids in `top_edges` are compact too.  For the async
+    regime pass the IN-FLIGHT-AWARE ledger (flat + mail_f, mu + mail_mu)
+    — then mass_total is the conserved local+in-flight total.  `extra`
+    carries regime-specific host gauges (staleness, mailbox age
+    histogram) straight onto the record."""
+    W = schedule.period or GRAPH_WINDOW
+    # the conserved ledger spans the FULL buffer — computed before any
+    # active-subset gather, or the gauge would track the round's subset
+    # draw instead of the invariant and trip the report --check gate
+    mass_total = jnp.sum(mu.astype(jnp.float32))
+    if active is not None:
+        window = tuple(schedule.induced(int(t0) + i, active, "row")
+                       for i in range(W))
+        take = lambda a: jnp.take(a, active, axis=0)
+        flat, mu = take(flat), take(mu)
+        personal = jax.tree.map(take, personal)
+    else:
+        window = tuple(schedule.at(int(t0) + i) for i in range(W))
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), t0)
+    has_personal = bool(jax.tree.leaves(personal))
+    g, att = _snapshot(flat, mu, personal, window[0], window, key,
+                       with_personal=has_personal)
+    sink.emit(_record.graph_record(
+        run=run_id, algo=algo, step=step, m=m, mass_total=mass_total,
+        n_active=None if active is None else int(active.shape[0]),
+        top_edges=top_edges(window[0], att),
+        **(extra or {}), **g))

@@ -11,15 +11,19 @@ Two layers, deliberately separate:
                     plain gauges on the round/tick record — cheap
                     enough to leave on whenever telemetry is on.
 
-PhaseTimer measures HOST wall-clock: callers must block_until_ready()
-on the phase's outputs (or time a whole round whose result they fetch)
-for the number to mean device time; otherwise it measures dispatch.
+PhaseTimer measures HOST wall-clock.  For the number to mean device
+time rather than dispatch, the phase must block on its outputs before
+the bucket closes — `phase(name, block=True)` does that for you: assign
+the phase's result to the yielded holder's `.out` and
+jax.block_until_ready runs inside the bucket.  block=False (default)
+keeps the seed behaviour for callers that block themselves or that
+deliberately time dispatch.
 """
 from __future__ import annotations
 
 import time
 from contextlib import contextmanager
-from typing import Optional
+from typing import Any, Optional
 
 import jax
 
@@ -35,27 +39,41 @@ def maybe_trace(profile_dir: Optional[str]):
         yield
 
 
+class _PhaseResult:
+    """The holder `phase()` yields: set `.out` to the phase's result and
+    a block=True phase waits on it before the bucket closes."""
+    __slots__ = ("out",)
+
+    def __init__(self):
+        self.out: Any = None
+
+
 class PhaseTimer:
     """Named perf_counter buckets: accumulate seconds per phase, then
     `gauges()` renders them as `t_<phase>_s` record fields.
 
         pt = PhaseTimer()
-        with pt.phase("round"):
+        with pt.phase("round", block=True) as ph:
             state, metrics = step(state)
-            jax.block_until_ready(state)
+            ph.out = metrics          # block_until_ready before closing
         sink.emit(round_record(step=r, **pt.gauges(), ...))
 
+    The block= form closes the dispatch-vs-device footgun: without it a
+    jitted step returns immediately and the bucket times dispatch only.
     Re-entering a phase accumulates; `reset()` clears between emits."""
 
     def __init__(self):
         self._acc: dict = {}
 
     @contextmanager
-    def phase(self, name: str):
+    def phase(self, name: str, block: bool = False):
+        holder = _PhaseResult()
         t0 = time.perf_counter()
         try:
-            yield
+            yield holder
         finally:
+            if block and holder.out is not None:
+                jax.block_until_ready(holder.out)
             self._acc[name] = (self._acc.get(name, 0.0)
                                + time.perf_counter() - t0)
 

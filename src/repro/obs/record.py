@@ -1,10 +1,13 @@
 """Versioned metric records — the ONE shape every execution path emits.
 
-Three kinds, one envelope (docs/observability.md §Records):
+Five kinds, one envelope (docs/observability.md §Records):
 
   kind="round"  sync simulator round / resident Regime B round
   kind="tick"   AsyncRuntime tick window
   kind="serve"  one serve_batch call
+  kind="graph"  collaboration-graph snapshot every `graph_every` rounds
+                (schema v2; docs/observability.md §Graph diagnostics)
+  kind="alert"  flight-recorder anomaly trip (schema v2; obs.flight)
 
 Each record is a flat JSON-able dict with a fixed envelope
 (schema/kind/step identity) plus kind-specific required fields and any
@@ -23,7 +26,10 @@ import json
 import math
 from typing import Iterable, Iterator, Optional, TextIO, Union
 
-SCHEMA_VERSION = 1
+# v2 (PR 9): adds the "graph" and "alert" kinds.  v1 records remain
+# valid under v2 readers (no v1 field changed meaning); v2 records are
+# rejected loudly by v1 readers — the newer-schema rule below.
+SCHEMA_VERSION = 2
 
 # envelope present on every record
 _ENVELOPE = ("schema", "kind", "run", "algo", "step")
@@ -34,6 +40,8 @@ _REQUIRED = {
     "round": ("wire_bytes",),
     "tick": ("vtime", "wire_bytes"),
     "serve": ("path", "batch", "latency_ms"),
+    "graph": ("contraction",),
+    "alert": ("reason",),
 }
 
 _KINDS = tuple(_REQUIRED)
@@ -76,6 +84,14 @@ def serve_record(**kw) -> dict:
     return make_record("serve", **kw)
 
 
+def graph_record(**kw) -> dict:
+    return make_record("graph", **kw)
+
+
+def alert_record(**kw) -> dict:
+    return make_record("alert", **kw)
+
+
 def validate(rec: dict, max_schema: int = SCHEMA_VERSION) -> None:
     """Raise ValueError naming the first problem; returns None when the
     record is well-formed.  A record from a NEWER schema than the reader
@@ -114,12 +130,17 @@ def render(rec: dict) -> str:
     if rec.get("algo"):
         bits.append(rec["algo"])
     for k in ("loss", "acc", "vtime", "latency_ms", "consensus_gap_mean",
-              "mass_total", "ef_ratio", "wire_bytes", "round_s"):
+              "mass_total", "ef_ratio", "wire_bytes", "round_s",
+              "contraction", "moved_mass", "row_cos_mean"):
         if k in rec and rec[k] is not None:
             v = rec[k]
             bits.append(f"{k}={v:.4g}" if isinstance(v, float) else f"{k}={v}")
     if kind == "serve":
         bits.insert(1, f"{rec.get('path', '?')}/B={rec.get('batch', '?')}")
+    if kind == "alert":
+        bits.append(f"reason={rec.get('reason', '?')}")
+        if rec.get("detector"):
+            bits.append(f"detector={rec['detector']}")
     return " ".join(bits)
 
 

@@ -2,6 +2,9 @@
 gate it in CI (docs/observability.md §Report).
 
     PYTHONPATH=src python -m repro.obs.report run.jsonl [--check]
+    PYTHONPATH=src python -m repro.obs.report run.jsonl --graph
+    PYTHONPATH=src python -m repro.obs.report --diff a.jsonl b.jsonl
+    PYTHONPATH=src python -m repro.obs.report --postmortem dump.json.gz
 
 Plain mode prints the per-kind summary tables the benchmarks used to
 hand-roll: round/tick progression (loss, acc, consensus gap, mass,
@@ -9,7 +12,11 @@ wire bytes, phase timings) and serve latency percentiles per
 (path, batch) tag.  `--check` validates every record against the
 schema and hard-fails (exit 1) when the push-sum mass ledger drifts
 from its own first value beyond f32 tolerance — the CI telemetry
-smoke's teeth.  Jax-free on purpose: this must run anywhere.
+smoke's teeth.  `--graph` renders the schema-v2 collaboration-graph
+records: connectivity trajectory, top-k influential edges, per-client
+inflow drill-down.  `--diff` is a step-aligned two-run comparison;
+`--postmortem` renders a flight-recorder dump (obs.flight).  Jax-free
+on purpose: this must run anywhere.
 """
 from __future__ import annotations
 
@@ -80,6 +87,104 @@ def summarize_serve(recs: List[dict]) -> str:
                          "rps"], "serve")
 
 
+def parse_edges(spec: str) -> List[tuple]:
+    """Inverse of obs.graph.top_edges: 'j->i:val|...' -> [(j, i, val)].
+    Malformed parts are skipped (a record is data, not code)."""
+    out = []
+    for part in (spec or "").split("|"):
+        if not part:
+            continue
+        edge, _, val = part.rpartition(":")
+        src, _, dst = edge.partition("->")
+        try:
+            out.append((int(src), int(dst), float(val)))
+        except ValueError:
+            continue
+    return out
+
+
+def summarize_graph(recs: List[dict]) -> str:
+    """The --graph view: connectivity trajectory (contraction estimate,
+    moved mass, similarity gauges, degree load) + top-k influential edges
+    aggregated across the run + per-client inflow drill-down."""
+    cols = ["step", "contraction", "moved_mass", "row_cos_mean",
+            "row_cos_min", "head_dist_mean", "in_degree_mean",
+            "starved_frac", "staleness_max", "mass_total"]
+    rows = recs if len(recs) <= 12 else (
+        recs[:3] + [{"step": "..."}] + recs[-8:])
+    out = _table(rows, cols, "graph")
+    if not out:
+        return ""
+    edge_sum: dict = {}
+    inflow: dict = {}
+    for r in recs:
+        for src, dst, val in parse_edges(r.get("top_edges", "")):
+            edge_sum[(src, dst)] = edge_sum.get((src, dst), 0.0) + val
+            inflow[dst] = inflow.get(dst, 0.0) + val
+    if edge_sum:
+        top = sorted(edge_sum.items(), key=lambda kv: -kv[1])[:8]
+        out += "top edges (sum of per-record attribution):\n"
+        out += "".join(f"  {s:>4} -> {d:<4} {v:10.4g}\n"
+                       for (s, d), v in top)
+        cl = sorted(inflow.items(), key=lambda kv: -kv[1])[:8]
+        out += "per-client inflow (top receivers):\n"
+        out += "".join(f"  client {c:<4} {v:10.4g}\n" for c, v in cl)
+    return out
+
+
+def diff_runs(recs_a: List[dict], recs_b: List[dict]) -> str:
+    """--diff: step-aligned comparison of two runs.  Records pair by
+    (kind, step); for each shared gauge of interest the table shows
+    a, b and the delta b - a.  Streams that never align produce an empty
+    table (the caller reports that loudly)."""
+    keyed_b = {(r["kind"], r["step"]): r for r in recs_b}
+    out = ""
+    for kind in ("round", "tick", "graph"):
+        rows = []
+        for ra in recs_a:
+            if ra["kind"] != kind:
+                continue
+            rb = keyed_b.get((kind, ra["step"]))
+            if rb is None:
+                continue
+            row = {"step": ra["step"]}
+            for g in ("loss", "consensus_gap_mean", "mass_total",
+                      "wire_bytes", "contraction"):
+                va, vb = ra.get(g), rb.get(g)
+                if va is None or vb is None:
+                    continue
+                row[f"{g}_a"] = va
+                row[f"d_{g}"] = vb - va
+            rows.append(row)
+        if len(rows) > 12:
+            rows = rows[:3] + [{"step": "..."}] + rows[-8:]
+        out += _table(rows, ["step", "loss_a", "d_loss",
+                             "consensus_gap_mean_a", "d_consensus_gap_mean",
+                             "mass_total_a", "d_mass_total",
+                             "wire_bytes_a", "d_wire_bytes",
+                             "contraction_a", "d_contraction"],
+                      f"diff:{kind} (a vs b; d_* = b - a)")
+    return out
+
+
+def render_postmortem(payload: dict) -> str:
+    """Render a flight-recorder dump (obs.flight.load_postmortem): the
+    alert, then the tail of the ring leading up to it."""
+    alert = payload.get("alert", {})
+    recs = payload.get("records", [])
+    lines = [f"== post-mortem (schema v{payload.get('schema', '?')}, "
+             f"{len(recs)} ring records) ==",
+             f"ALERT: {_record.render(alert)}"]
+    for k in ("value", "threshold", "dump", "source_kind"):
+        if alert.get(k) is not None:
+            lines.append(f"  {k} = {alert[k]}")
+    tail = recs[-12:]
+    if tail:
+        lines.append(f"-- last {len(tail)} records before the trip --")
+        lines.extend("  " + _record.render(r) for r in tail)
+    return "\n".join(lines) + "\n"
+
+
 def check_mass(recs: Iterable[dict]) -> List[str]:
     """Mass-conservation gate: within each (run, algo, kind) stream the
     mass_total gauge must stay at its first value to f32 rtol.  (Sync
@@ -106,17 +211,50 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser(
         prog="repro.obs.report",
         description="Render (and optionally gate) a telemetry JSONL run.")
-    ap.add_argument("jsonl", nargs="+", help="record file(s)")
+    ap.add_argument("jsonl", nargs="+", help="record file(s); with "
+                    "--diff exactly two, with --postmortem dump file(s)")
     ap.add_argument("--check", action="store_true",
                     help="validate schema + mass ledger; exit 1 on drift")
     ap.add_argument("--kind", default="",
-                    help="restrict to one record kind (round/tick/serve)")
+                    help="restrict to one record kind "
+                         "(round/tick/serve/graph/alert)")
+    ap.add_argument("--graph", action="store_true",
+                    help="render the collaboration-graph records: "
+                         "connectivity trajectory, top-k influential "
+                         "edges, per-client inflow")
+    ap.add_argument("--diff", action="store_true",
+                    help="step-aligned comparison of exactly two runs "
+                         "(loss / consensus gap / mass / wire-byte "
+                         "deltas, b - a)")
+    ap.add_argument("--postmortem", action="store_true",
+                    help="render flight-recorder dump file(s) "
+                         "(obs.flight post-mortems, .json.gz)")
     args = ap.parse_args(argv)
 
+    if args.postmortem:
+        from repro.obs import flight
+        for path in args.jsonl:
+            try:
+                print(render_postmortem(flight.load_postmortem(path)),
+                      end="")
+            except (OSError, ValueError, EOFError) as e:
+                print(f"report: INVALID post-mortem {path}: {e}",
+                      file=sys.stderr)
+                return 1
+        return 0
+
+    if args.diff and len(args.jsonl) != 2:
+        print("report: --diff wants exactly two record files",
+              file=sys.stderr)
+        return 2
+
     recs: List[dict] = []
+    per_file: List[List[dict]] = []
     try:
         for path in args.jsonl:
-            recs.extend(_record.load_jsonl(path))
+            loaded = list(_record.load_jsonl(path))
+            per_file.append(loaded)
+            recs.extend(loaded)
     except (OSError, ValueError) as e:
         print(f"report: INVALID: {e}", file=sys.stderr)
         return 1
@@ -127,13 +265,32 @@ def main(argv=None) -> int:
         print("report: no records", file=sys.stderr)
         return 1
 
-    for kind in ("round", "tick"):
-        out = summarize_rounds([r for r in recs if r["kind"] == kind], kind)
+    if args.diff:
+        out = diff_runs(per_file[0], per_file[1])
+        if not out:
+            print("report: --diff found no step-aligned records",
+                  file=sys.stderr)
+            return 1
+        print(out, end="")
+    elif args.graph:
+        out = summarize_graph([r for r in recs if r["kind"] == "graph"])
         if out:
             print(out, end="")
-    out = summarize_serve([r for r in recs if r["kind"] == "serve"])
-    if out:
-        print(out, end="")
+        elif not args.check:
+            print("report: no graph records (run with graph_every > 0)",
+                  file=sys.stderr)
+            return 1
+        for a in (r for r in recs if r["kind"] == "alert"):
+            print(_record.render(a))
+    else:
+        for kind in ("round", "tick"):
+            out = summarize_rounds([r for r in recs if r["kind"] == kind],
+                                   kind)
+            if out:
+                print(out, end="")
+        out = summarize_serve([r for r in recs if r["kind"] == "serve"])
+        if out:
+            print(out, end="")
 
     if args.check:
         errors = check_mass(recs)

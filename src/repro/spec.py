@@ -55,6 +55,12 @@ class AlgoSpec:
     participation_frac: float = 1.0
     block_m: Optional[int] = None   # pallas DMA-panel knob (pallas only)
     telemetry: bool = False         # in-graph round gauges (repro.obs)
+    # collaboration-graph records (repro.obs.graph, schema v2): emit one
+    # kind="graph" record every `graph_every` rounds — contraction
+    # estimate, per-edge attribution, similarity gauges.  0 = never.
+    # Rides the telemetry gate: the graph snapshot reads the same
+    # resident buffer the round gauges read.
+    graph_every: int = 0
 
     def __post_init__(self):
         if self.topology not in topology.TopologySchedule.KINDS:
@@ -107,6 +113,17 @@ class AlgoSpec:
                 "telemetry gauges (repro.obs) read the resident "
                 "(m, d_flat) buffer; resident=False has no buffer to "
                 "gauge — enable resident or drop telemetry")
+        if self.graph_every < 0:
+            raise ValueError(
+                f"graph_every={self.graph_every}; want 0 (off) or a "
+                f"positive round period")
+        if self.graph_every > 0 and not self.telemetry:
+            # same loud-knob rule as block_m: graph records ride the
+            # telemetry gate — a stray period would silently emit nothing
+            raise ValueError(
+                "graph_every > 0 emits collaboration-graph records "
+                "through the telemetry spine; enable telemetry (or drop "
+                "the knob)")
 
     # -- name -> object resolution (the registries) -----------------------
     def schedule(self, m: int) -> topology.TopologySchedule:

@@ -526,3 +526,143 @@ def test_maybe_trace_falsy_is_noop(tmp_path):
         x = jnp.ones(()) + 1
     assert float(x) == 2.0
     assert list(tmp_path.iterdir()) == []
+
+
+def test_phase_timer_block_waits_on_the_yielded_result():
+    """phase(block=True) yields a holder; whatever the body parks on
+    .out is block_until_ready'd INSIDE the bucket, so the accumulated
+    time covers device compute, not just dispatch."""
+    t = obs.PhaseTimer()
+    with t.phase("round", block=True) as ph:
+        ph.out = jnp.ones((256, 256)) @ jnp.ones((256, 256))
+    assert float(ph.out[0, 0]) == 256.0
+    assert t.seconds("round") > 0
+    # block=True with nothing parked is a plain timer (no crash)
+    with t.phase("eval", block=True):
+        pass
+    assert set(t.gauges()) == {"t_round_s", "t_eval_s"}
+    # default stays the old API: no holder needed, nothing blocked
+    with t.phase("idle"):
+        pass
+    assert t.seconds("idle") >= 0
+
+
+# ---------------------------------------------------------------------------
+# schema versioning: committed v1 fixture + loud newer-schema rejection
+# ---------------------------------------------------------------------------
+V1_FIXTURE = ROOT / "tests" / "data" / "schema_v1.jsonl"
+
+
+def test_schema_v1_fixture_loads_under_v2_readers(capsys):
+    """Backwards compat is a committed artifact, not a comment: the
+    schema-v1 JSONL written before the graph/alert kinds existed must
+    keep loading, validating and reporting under the v2 readers."""
+    recs = list(record.load_jsonl(str(V1_FIXTURE)))
+    assert recs and record.schema_of(recs) == 1
+    for r in recs:
+        record.validate(r)                     # v2 reader, v1 records
+    assert {r["kind"] for r in recs} == {"round", "tick", "serve"}
+    assert report.main([str(V1_FIXTURE), "--check"]) == 0
+    out = capsys.readouterr().out
+    assert "schema v1" in out and "report: OK" in out
+
+
+def test_newer_schema_jsonl_rejected_loudly(tmp_path, capsys):
+    """A v3 stream (from some future writer) must fail the report gate
+    with exit 1 — never a silent partial render."""
+    import json
+    p = tmp_path / "future.jsonl"
+    rec = obs.round_record(run="f", algo="a", step=1, wire_bytes=0)
+    rec["schema"] = obs.SCHEMA_VERSION + 1
+    p.write_text(json.dumps(rec) + "\n")
+    assert report.main([str(p), "--check"]) == 1
+    assert "newer" in capsys.readouterr().err
+
+
+# ---------------------------------------------------------------------------
+# serve-meter stats edge cases + report --diff
+# ---------------------------------------------------------------------------
+def test_serve_meter_stats_edge_cases():
+    meter = ServeMeter(sink=obs.NullSink(), window=4, run="t")
+    # single sample: p50 == p99 == the sample
+    meter.observe("fused", 32, 0.002)
+    st = {(r["path"], r["batch"]): r for r in meter.stats()}
+    row = st[("fused", 32)]
+    assert row["p50_ms"] == row["p99_ms"] == pytest.approx(2.0)
+    assert row["rps"] == pytest.approx(32 / 0.002)
+    # p50 == 0 (clock too coarse to resolve): rps is None, not a crash
+    meter.observe("naive", 8, 0.0)
+    st = {(r["path"], r["batch"]): r for r in meter.stats()}
+    assert st[("naive", 8)]["rps"] is None
+    # the live serve record: rps=None means the gauge is OMITTED (the
+    # JSONL carries no key), never a bogus number
+    ring = obs.RingSink()
+    m2 = ServeMeter(sink=ring, window=4, run="t")
+    m2.observe("naive", 8, 0.0)
+    assert "rps" not in ring.records[-1]
+    record.validate(ring.records[-1])
+    # empty window (cleared tag) is skipped, not rendered as NaN
+    meter.clear("fused", 32)
+    assert ("fused", 32) not in {(r["path"], r["batch"])
+                                 for r in meter.stats()}
+    # identical samples: every percentile is that value
+    for _ in range(4):
+        meter.observe("tie", 16, 0.003)
+    st = {(r["path"], r["batch"]): r for r in meter.stats()}
+    assert st[("tie", 16)]["p50_ms"] == st[("tie", 16)]["p99_ms"] \
+        == pytest.approx(3.0)
+
+
+def test_report_percentile_matches_meter_definition():
+    xs = [5.0, 1.0, 3.0, 2.0, 4.0]
+    assert report.percentile(xs, 50) == 3.0     # nearest-rank, no interp
+    assert report.percentile(xs, 0) == 1.0
+    assert report.percentile(xs, 100) == 5.0
+    assert report.percentile([7.0], 99) == 7.0
+    assert np.isnan(report.percentile([], 50))
+    meter = ServeMeter(sink=obs.NullSink(), window=8, run="t")
+    for x in xs:
+        meter.observe("p", 1, x * 1e-3)
+    row = meter.stats()[0]
+    assert row["p50_ms"] == pytest.approx(report.percentile(xs, 50))
+    assert row["p99_ms"] == pytest.approx(report.percentile(xs, 99))
+
+
+def _jsonl(path, recs):
+    import json
+    path.write_text("".join(json.dumps(r) + "\n" for r in recs))
+
+
+def test_report_diff_step_aligned(tmp_path, capsys):
+    a = tmp_path / "a.jsonl"
+    b = tmp_path / "b.jsonl"
+    _jsonl(a, [obs.round_record(run="a", algo="x", step=s, loss=1.0 / s,
+                                mass_total=8.0, wire_bytes=100 * s)
+               for s in (1, 2, 3)])
+    # b misses step 3 (diverged run) and improves the loss at 1, 2
+    _jsonl(b, [obs.round_record(run="b", algo="x", step=s, loss=0.5 / s,
+                                mass_total=8.0, wire_bytes=100 * s)
+               for s in (1, 2)])
+    assert report.main([str(a), str(b), "--diff"]) == 0
+    out = capsys.readouterr().out
+    assert "diff:round" in out and "d_loss" in out
+    # only the aligned steps appear
+    lines = [ln for ln in out.splitlines() if ln.strip()
+             and ln.split()[0].isdigit()]
+    assert [ln.split()[0] for ln in lines] == ["1", "2"]
+    # the delta column carries b - a = -0.5/s
+    assert "-0.5" in lines[0]
+
+
+def test_report_diff_exit_codes(tmp_path, capsys):
+    a = tmp_path / "a.jsonl"
+    _jsonl(a, [obs.round_record(run="a", algo="x", step=1, wire_bytes=0)])
+    # wrong file count is usage error: exit 2
+    assert report.main([str(a), "--diff"]) == 2
+    # two files but zero step-aligned records: exit 1
+    b = tmp_path / "b.jsonl"
+    _jsonl(b, [obs.serve_record(run="b", step=1, path="fused", batch=1,
+                                latency_ms=1.0)])
+    assert report.main([str(a), str(b), "--diff"]) == 1
+    err = capsys.readouterr().err
+    assert "no step-aligned" in err

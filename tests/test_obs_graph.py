@@ -1,0 +1,472 @@
+"""Collaboration-graph observability (PR 9, docs/observability.md
+§Graph diagnostics + §Flight recorder): the contraction estimate orders
+topologies the way the theory does, per-edge mass flow sums to the
+independently-accounted moved mass in BOTH regimes, and an injected
+mass drift trips the flight recorder into an alert + a post-mortem dump
+that `report --postmortem` renders."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import obs
+from repro.core import dfedpgp, topology
+from repro.hetero import mailbox as mbox
+from repro.hetero import profiles
+from repro.hetero.runtime import AsyncRuntime
+from repro.obs import flight, graph
+from repro.obs import report as obs_report
+from repro.optim import SGD
+from repro.spec import make_algo_spec
+
+
+# ---------------------------------------------------------------------------
+# contraction estimate
+# ---------------------------------------------------------------------------
+def test_contraction_ordering_full_exp_ring():
+    """ACCEPTANCE (a): tighter connectivity -> smaller contraction at
+    m=64 — full < exponential < ring, the paper's Gamma(W) ordering."""
+    m, key = 64, jax.random.PRNGKey(0)
+    rho = {}
+    for kind in ("full", "exponential", "ring"):
+        s = topology.get_schedule(kind, m, 0, 0)
+        window = tuple(s.at(t) for t in range(s.period or
+                                              graph.GRAPH_WINDOW))
+        rho[kind] = float(graph.contraction_estimate(window, key))
+    assert rho["full"] < rho["exponential"] < rho["ring"]
+    # the full graph reaches exact consensus in one application; the ring
+    # is the classic slow mixer
+    assert rho["full"] < 1e-6
+    assert rho["ring"] > 0.5
+    assert rho["ring"] < 1.0 + 1e-6
+
+
+def test_contraction_random_degree_tightens():
+    m, key = 64, jax.random.PRNGKey(1)
+
+    def est(n):
+        s = topology.get_schedule("random", m, n, 0)
+        window = tuple(s.at(t) for t in range(graph.GRAPH_WINDOW))
+        return float(graph.contraction_estimate(window, key))
+
+    assert est(16) < est(2) < 1.0
+
+
+def test_contraction_rejects_empty_window():
+    with pytest.raises(ValueError, match="topology"):
+        graph.contraction_estimate((), jax.random.PRNGKey(0))
+
+
+def test_contraction_on_induced_subgraph():
+    """The estimate works unchanged on the induced window (the sampled
+    round's realized graph) — shapes are compact, result is finite."""
+    m = 32
+    s = topology.get_schedule("random", m, 4, 0)
+    active = jnp.arange(0, m, 2)
+    window = tuple(s.induced(t, active, "row") for t in range(4))
+    rho = float(graph.contraction_estimate(window, jax.random.PRNGKey(2)))
+    assert np.isfinite(rho) and 0.0 <= rho < 1.0 + 1e-6
+
+
+# ---------------------------------------------------------------------------
+# per-edge mass flow == independently accounted moved mass
+# ---------------------------------------------------------------------------
+def test_edge_mass_flow_matches_dense_sync():
+    """ACCEPTANCE (b, sync half): edge_mass_flow over the pull-form
+    row-stochastic P sums to the dense accounting
+    sum_{i != j} P[i, j] mu[j]."""
+    m = 16
+    P = topology.directed_random(jax.random.PRNGKey(0), m, 4)
+    mu = jax.random.uniform(jax.random.PRNGKey(1), (m,), minval=0.5,
+                            maxval=2.0)
+    D = np.asarray(topology.densify(P), np.float64)
+    muN = np.asarray(mu, np.float64)
+    expect = float((D * muN[None, :]).sum() - (np.diag(D) * muN).sum())
+    got = float(graph.moved_mass(P, mu))
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+    # the flow matrix itself is non-negative with a zero diagonal
+    flow = np.asarray(graph.edge_mass_flow(P, mu))
+    assert (flow >= 0).all()
+    rows = np.arange(m)[:, None]
+    assert (flow[np.asarray(P.idx) == rows] == 0).all()
+
+
+def test_edge_mass_flow_matches_dense_async_fired():
+    """ACCEPTANCE (b, async half): over the column-stochastic push form
+    with a fired gate, the flow sums to sum_{j fired} mu[j] * (1 - w_jj)
+    — everything a firing sender pushes except its kept self share."""
+    m = 16
+    P = topology.to_push_sparse(
+        topology.directed_random(jax.random.PRNGKey(3), m, 4))
+    mu = jax.random.uniform(jax.random.PRNGKey(4), (m,), minval=0.5,
+                            maxval=2.0)
+    fired = jnp.asarray(np.random.default_rng(0).random(m) < 0.5)
+    D = np.asarray(topology.densify(P), np.float64)
+    muN = np.asarray(mu, np.float64)
+    fN = np.asarray(fired)
+    expect = float(sum(muN[j] * (1.0 - D[j, j]) for j in range(m)
+                       if fN[j]))
+    got = float(graph.moved_mass(P, mu, fired=fired))
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+def _quad(m=8, d=6, dp=3):
+    key = jax.random.PRNGKey(0)
+    cu = jax.random.normal(key, (m, d))
+    cv = jax.random.normal(jax.random.fold_in(key, 1), (m, dp))
+
+    def loss_fn(p, b):
+        return jnp.sum((p["body"] - b["tu"][0]) ** 2) + \
+            jnp.sum((p["head"] - b["tv"][0]) ** 2)
+
+    return loss_fn, {"body": True, "head": False}, cu, cv
+
+
+def _batches(cu, cv, kv, ku):
+    rep = lambda x, k: jnp.repeat(x[:, None], k, 1)[..., None, :]
+    return {"v": {"tu": rep(cu, kv), "tv": rep(cv, kv)},
+            "u": {"tu": rep(cu, ku), "tv": rep(cv, ku)}}
+
+
+def _tick_batch(b, t, k_v):
+    src = b["v"] if t < k_v else b["u"]
+    off = t if t < k_v else t - k_v
+    return {k: v[:, off] for k, v in src.items()}
+
+
+def test_round_gauge_moved_mass_sync_runtime():
+    """The resident sync round's telemetry moved_mass equals the dense
+    accounting over the round's P and its PRE-mix mu."""
+    loss_fn, mask, cu, cv = _quad()
+    m = cu.shape[0]
+    opt = SGD(lr=0.05, momentum=0.9)
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt,
+                           opt_v=opt, k_v=1, k_u=2, telemetry=True)
+    state, layout = algo.init_flat({"body": cu, "head": cv})
+    # non-trivial pre-mix mu (row-stochastic mixing would otherwise keep
+    # it pinned at the all-ones fixed point and hide a post-mix bug)
+    mu0 = jax.random.uniform(jax.random.PRNGKey(7), (m,), minval=0.5,
+                             maxval=1.5)
+    state = state._replace(mu=mu0)
+    P = topology.directed_random(jax.random.PRNGKey(5), m, 3)
+    b = _batches(cu, cv, algo.k_v, algo.k_u)
+    _, metrics = algo.round_fn_flat(state, P, b, layout)
+    D = np.asarray(topology.densify(P), np.float64)
+    muN = np.asarray(mu0, np.float64)
+    expect = float((D * muN[None, :]).sum() - (np.diag(D) * muN).sum())
+    np.testing.assert_allclose(float(metrics["moved_mass"]), expect,
+                               rtol=1e-5)
+
+
+def test_round_gauge_moved_mass_sampled_matches_full_at_sample_all():
+    """Sample-all parity extends to the new gauge: the sampled round at
+    active = arange(m) reports the same moved_mass as round_fn_flat."""
+    loss_fn, mask, cu, cv = _quad()
+    m = cu.shape[0]
+    opt = SGD(lr=0.05, momentum=0.9)
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt,
+                           opt_v=opt, k_v=1, k_u=2, telemetry=True)
+    state, layout = algo.init_flat({"body": cu, "head": cv})
+    P = topology.directed_random(jax.random.PRNGKey(6), m, 3)
+    b = _batches(cu, cv, algo.k_v, algo.k_u)
+    active = jnp.arange(m)
+    P_act = topology.induced_subgraph(P, active, "row")
+    _, mt_full = algo.round_fn_flat(state, P, b, layout)
+    _, mt_samp = algo.round_fn_sampled(state, P_act, active, b, layout)
+    assert float(mt_full["moved_mass"]) == float(mt_samp["moved_mass"])
+
+
+def test_tick_gauge_moved_mass_async_runtime():
+    """ACCEPTANCE (b, async runtime pin): under the uniform profile all
+    clients fire together on the window's last tick with mu still at the
+    all-ones init, so the tick's moved_mass gauge must equal
+    m - trace(P) of the topology the fires rode."""
+    loss_fn, mask, cu, cv = _quad()
+    m = cu.shape[0]
+    opt = SGD(lr=0.05, momentum=0.9)
+    algo = dfedpgp.DFedPGP(loss_fn=loss_fn, mask=mask, opt_u=opt,
+                           opt_v=opt, k_v=1, k_u=2, telemetry=True)
+    rt, s = AsyncRuntime.build(algo, {"body": cu, "head": cv},
+                               profiles.uniform(m), depth=2)
+    topo = topology.to_push_sparse(
+        topology.directed_random(jax.random.PRNGKey(8), m, 3))
+    tick = jax.jit(lambda s, p, b: rt.tick(s, p, b))
+    b = _batches(cu, cv, algo.k_v, algo.k_u)
+    moved = []
+    for t in range(rt.k_total):
+        s, mt = tick(s, topo, _tick_batch(b, t, algo.k_v))
+        moved.append((int(mt["n_fired"]), float(mt["moved_mass"])))
+    # no fire -> no mass moved; the all-fire tick moves m - trace(P)
+    D = np.asarray(topology.densify(topo), np.float64)
+    expect = float(m - np.trace(D))
+    for n_fired, mm in moved[:-1]:
+        assert n_fired == 0 and mm == 0.0
+    assert moved[-1][0] == m
+    np.testing.assert_allclose(moved[-1][1], expect, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# attribution, degree load, similarity, mailbox ages
+# ---------------------------------------------------------------------------
+def test_edge_delta_attribution_zero_self_and_debias():
+    m = 8
+    P = topology.directed_random(jax.random.PRNGKey(0), m, 3)
+    flat = jnp.ones((m, 4)) * jnp.arange(1, m + 1, dtype=jnp.float32)[:, None]
+    mu = jnp.full((m,), 2.0)
+    att = np.asarray(graph.edge_delta_attribution(P, flat, mu))
+    rows = np.arange(m)[:, None]
+    assert (att[np.asarray(P.idx) == rows] == 0).all()
+    # de-bias: z = flat / mu, so sender j contributes w * ||flat_j|| / 2
+    idx, w = np.asarray(P.idx), np.asarray(P.w, np.float64)
+    znorm = np.linalg.norm(np.asarray(flat, np.float64), axis=1) / 2.0
+    expect = w * znorm[idx]
+    expect[idx == rows] = 0.0
+    np.testing.assert_allclose(att, expect, rtol=1e-5)
+
+
+def test_degree_utilization_flags_starved_client():
+    # client 0 receives nothing: its row is all self edges
+    m = 6
+    P = topology.directed_random(jax.random.PRNGKey(1), m, 2)
+    idx = np.asarray(P.idx).copy()
+    w = np.asarray(P.w).copy()
+    idx[0, :] = 0
+    w[0, :] = 0.0
+    w[0, 0] = 1.0
+    P0 = topology.SparseTopology(jnp.asarray(idx), jnp.asarray(w))
+    g = {k: float(v) for k, v in graph.degree_utilization(P0).items()}
+    assert g["in_degree_min"] == 0.0
+    assert g["starved_frac"] == pytest.approx(1.0 / m)
+    assert g["in_degree_mean"] > 0.0
+    assert g["out_degree_max"] >= g["out_degree_mean"]
+
+
+def test_row_cosine_identical_rows_and_pairwise_distance():
+    m, key = 16, jax.random.PRNGKey(0)
+    flat = jnp.tile(jax.random.normal(key, (1, 8)), (m, 1))
+    mu = jnp.ones((m,))
+    g = graph.row_cosine(flat, mu, key)
+    np.testing.assert_allclose(float(g["row_cos_mean"]), 1.0, atol=1e-5)
+    np.testing.assert_allclose(float(g["row_cos_min"]), 1.0, atol=1e-5)
+    rows = graph.stack_client_rows({"head": flat, "none": None})
+    d = graph.pairwise_distance(rows, key)
+    np.testing.assert_allclose(float(d["head_dist_max"]), 0.0, atol=1e-5)
+    with pytest.raises(ValueError, match="leaves"):
+        graph.stack_client_rows({"a": None})
+
+
+def test_mailbox_age_hist_covers_every_slot():
+    depth, m = 4, 3
+    slots = jnp.arange(depth * m, dtype=jnp.float32).reshape(depth, m)
+    h = graph.mailbox_age_hist(slots, tick=5)
+    # delta d reads slot (5 + d) mod depth; together they cover all slots
+    per_slot = np.asarray(slots).sum(axis=1)
+    for d in range(1, depth + 1):
+        np.testing.assert_allclose(float(h[f"mail_age{d}_mass"]),
+                                   per_slot[(5 + d) % depth])
+    assert len(h) == depth
+
+
+def test_top_edges_roundtrip_through_report_parser():
+    m = 8
+    P = topology.directed_random(jax.random.PRNGKey(2), m, 3)
+    att = jax.random.uniform(jax.random.PRNGKey(3), P.w.shape)
+    spec = graph.top_edges(P, att, k=5)
+    edges = obs_report.parse_edges(spec)
+    assert 0 < len(edges) <= 5
+    idx = np.asarray(P.idx)
+    attN = np.asarray(att, np.float64)
+    rows = np.arange(m)[:, None]
+    attN[idx == rows] = 0.0
+    best = float(attN.max())
+    srcs = [e[0] for e in edges]
+    assert edges[0][2] == pytest.approx(best, rel=1e-3)
+    assert all(0 <= s < m for s in srcs)
+    # vals sorted descending, self edges never appear
+    vals = [e[2] for e in edges]
+    assert vals == sorted(vals, reverse=True)
+    for src, dst, _ in edges:
+        assert src != dst
+    # malformed parts are data, not crashes
+    assert obs_report.parse_edges("3->1:0.5|garbage|:|") == [(3, 1, 0.5)]
+    assert obs_report.parse_edges("") == []
+
+
+# ---------------------------------------------------------------------------
+# emit_graph_record: schema-valid records in both id spaces
+# ---------------------------------------------------------------------------
+def test_emit_graph_record_full_and_induced():
+    m = 16
+    sched = topology.get_schedule("random", m, 4, 0)
+    key = jax.random.PRNGKey(0)
+    flat = jax.random.normal(key, (m, 32))
+    mu = jnp.ones((m,))
+    personal = {"head": jax.random.normal(key, (m, 8))}
+    sink = obs.RingSink(8)
+    graph.emit_graph_record(sink, run_id="t", algo="dfedpgp", m=m,
+                            seed=0, schedule=sched, step=1, t0=0,
+                            flat=flat, mu=mu, personal=personal)
+    active = jnp.arange(0, m, 2)
+    graph.emit_graph_record(sink, run_id="t", algo="dfedpgp", m=m,
+                            seed=0, schedule=sched, step=2, t0=1,
+                            flat=flat, mu=mu, personal=personal,
+                            active=active)
+    full, ind = sink.records
+    for r in (full, ind):
+        obs.record.validate(r)
+        assert r["kind"] == "graph" and r["schema"] == 2
+        for k in ("contraction", "moved_mass", "row_cos_mean",
+                  "head_dist_mean", "in_degree_mean", "top_edges"):
+            assert k in r
+    assert "n_active" not in full
+    assert ind["n_active"] == m // 2
+    # the ledger gauge spans the FULL buffer even for the induced record
+    assert ind["mass_total"] == pytest.approx(float(m))
+    # induced ids are compact: every endpoint < n_active
+    for src, dst, _ in obs_report.parse_edges(ind["top_edges"]):
+        assert src < m // 2 and dst < m // 2
+
+
+def test_graph_records_ride_the_simulator_sync():
+    sink = obs.RingSink(64)
+    sp = make_algo_spec("dfedpgp", telemetry=True, graph_every=2)
+    from repro.fl.simulator import SimConfig, run_experiment
+    sim = SimConfig(m=8, rounds=4, batch=4, k_local=2, k_personal=1,
+                    n_train=16, n_test=8, spec=sp)
+    run_experiment("dfedpgp", sim, sink=sink)
+    kinds = [r["kind"] for r in sink.records]
+    assert kinds.count("graph") == 2
+    assert kinds.count("round") == 4
+    for r in sink.records:
+        obs.record.validate(r)
+    # graph record every graph_every rounds, at the right steps
+    assert [r["step"] for r in sink.records if r["kind"] == "graph"] \
+        == [2, 4]
+    # round records carry the new moved_mass gauge
+    assert all("moved_mass" in r for r in sink.records
+               if r["kind"] == "round")
+
+
+def test_graph_records_ride_the_simulator_async():
+    sink = obs.RingSink(64)
+    sp = make_algo_spec("dfedpgp", telemetry=True, graph_every=2)
+    from repro.fl.simulator import SimConfig, run_experiment
+    sim = SimConfig(m=8, rounds=2, batch=4, k_local=2, k_personal=1,
+                    n_train=16, n_test=8, runtime="async",
+                    hetero="tiered", push_delay_max=2, mailbox_depth=4,
+                    spec=sp)
+    run_experiment("dfedpgp", sim, sink=sink)
+    gr = [r for r in sink.records if r["kind"] == "graph"]
+    assert len(gr) == 1 and gr[0]["step"] == 2
+    obs.record.validate(gr[0])
+    # async extras: staleness + the full mailbox age histogram
+    assert "staleness_max" in gr[0]
+    assert all(f"mail_age{d}_mass" in gr[0] for d in range(1, 5))
+    # mass_total is the conserved local + in-flight total
+    assert gr[0]["mass_total"] == pytest.approx(8.0, rel=1e-5)
+    assert all("moved_mass" in r for r in sink.records
+               if r["kind"] == "tick")
+
+
+def test_spec_graph_every_knob_is_loud():
+    with pytest.raises(ValueError, match="graph_every"):
+        make_algo_spec("dfedpgp", graph_every=-1, telemetry=True)
+    with pytest.raises(ValueError, match="telemetry"):
+        make_algo_spec("dfedpgp", graph_every=4)
+    sp = make_algo_spec("dfedpgp", graph_every=4, telemetry=True)
+    assert sp.graph_every == 4
+
+
+# ---------------------------------------------------------------------------
+# flight recorder
+# ---------------------------------------------------------------------------
+def _round(step, run="r0", **gauges):
+    return obs.round_record(run=run, algo="dfedpgp", step=step,
+                            wire_bytes=0, **gauges)
+
+
+def test_flight_recorder_mass_drift_alert_and_postmortem(tmp_path,
+                                                         capsys):
+    """ACCEPTANCE (c): an injected mass drift trips the recorder -> one
+    alert record + a gzip post-mortem dump that report --postmortem
+    renders (exit 0)."""
+    inner = obs.RingSink(64)
+    fr = flight.FlightRecorder(inner, dump_dir=str(tmp_path))
+    for s in range(1, 6):
+        fr.emit(_round(s, mass_total=8.0))
+    fr.emit(_round(6, mass_total=8.5))          # the injected leak
+    assert len(fr.alerts) == 1
+    alert = fr.alerts[0]
+    assert alert["kind"] == "alert"
+    assert alert["detector"] == "mass-drift"
+    assert "drifted" in alert["reason"]
+    obs.record.validate(alert)
+    # the alert also flowed through the inner sink, after the records
+    assert inner.records[-1]["kind"] == "alert"
+    # the dump exists, loads, and carries the ring context
+    assert len(fr.dumps) == 1
+    payload = flight.load_postmortem(fr.dumps[0])
+    assert payload["schema"] == obs.SCHEMA_VERSION
+    assert payload["alert"]["detector"] == "mass-drift"
+    assert any(r.get("step") == 6 for r in payload["records"])
+    # report --postmortem renders it, exit 0
+    rc = obs_report.main([fr.dumps[0], "--postmortem"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "ALERT" in out and "mass-drift" in out
+
+
+def test_flight_recorder_cooldown_one_alert_per_anomaly(tmp_path):
+    fr = flight.FlightRecorder(dump_dir=str(tmp_path), cooldown=10)
+    fr.emit(_round(1, mass_total=8.0))
+    for s in range(2, 8):                       # sustained drift
+        fr.emit(_round(s, mass_total=9.0))
+    assert len(fr.alerts) == 1
+
+
+def test_flight_recorder_consensus_growth_and_streams(tmp_path):
+    fr = flight.FlightRecorder(dump_dir=str(tmp_path), window=4)
+    # stream A grows 5x over the window; stream B stays flat
+    for s in range(1, 5):
+        fr.emit(_round(s, run="A", consensus_gap_mean=1.0))
+        fr.emit(_round(s, run="B", consensus_gap_mean=1.0))
+    fr.emit(_round(5, run="A", consensus_gap_mean=5.0))
+    fr.emit(_round(5, run="B", consensus_gap_mean=1.1))
+    assert len(fr.alerts) == 1
+    assert fr.alerts[0]["run"] == "A"
+    assert fr.alerts[0]["detector"] == "consensus-growth"
+
+
+def test_flight_recorder_ef_and_staleness_detectors(tmp_path):
+    fr = flight.FlightRecorder(dump_dir=str(tmp_path))
+    fr.emit(_round(1, ef_ratio=0.01))
+    assert fr.alerts[-1]["detector"] == "ef-blowup"
+    fr2 = flight.FlightRecorder(dump_dir=str(tmp_path))
+    fr2.emit(obs.tick_record(run="r", algo="a", step=1, vtime=1.0,
+                             wire_bytes=0, staleness_max=500.0))
+    assert fr2.alerts[-1]["detector"] == "starved-client"
+    # disabled detector never fires
+    fr3 = flight.FlightRecorder(dump_dir=str(tmp_path), ef_floor=None)
+    fr3.emit(_round(1, ef_ratio=0.01))
+    assert fr3.alerts == []
+
+
+def test_flight_recorder_passthrough_is_byte_identical(tmp_path):
+    inner = obs.RingSink(8)
+    fr = flight.FlightRecorder(inner, dump_dir=str(tmp_path))
+    rec = _round(1, mass_total=8.0)
+    fr.emit(rec)
+    assert inner.records[0] is rec
+
+
+def test_load_postmortem_rejects_newer_schema(tmp_path):
+    import gzip
+    p = tmp_path / "pm.json.gz"
+    with gzip.open(p, "wt") as f:
+        json.dump({"schema": obs.SCHEMA_VERSION + 1, "alert": {},
+                   "records": []}, f)
+    with pytest.raises(ValueError, match="newer"):
+        flight.load_postmortem(str(p))
+    assert obs_report.main([str(p), "--postmortem"]) == 1
