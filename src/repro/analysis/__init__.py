@@ -1,0 +1,38 @@
+"""Program invariant analyzer (docs/analysis.md).
+
+Static + compile-time checks over every registered jitted program:
+densification, donation, retraces, host syncs, schedule stochasticity.
+Run `python -m repro.analysis --all` or import the pytest-facing API:
+
+    from repro.analysis import run_all, run_program, PROGRAMS
+
+This module is imported BEFORE `repro.analysis.__main__` when invoked
+as `python -m repro.analysis` (package init runs first), and __main__
+must set XLA_FLAGS before anything imports jax — so everything here is
+lazy: no jax at import time (PEP 562).
+"""
+from typing import Any
+
+_EXPORTS = {
+    "PROGRAMS": "programs", "ProgramInstance": "programs",
+    "SIM_M": "programs", "N_ROUNDS": "programs",
+    "Violation": "detectors", "run_all": "detectors",
+    "run_program": "detectors", "run_fixture": "fixtures",
+    "check_densify": "detectors", "check_donation": "detectors",
+    "check_retrace": "detectors", "check_host_sync": "detectors",
+    "check_topology_stochastic": "detectors",
+    "check_schedules": "detectors", "render_report": "detectors",
+    "FIXTURES": "fixtures",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str) -> Any:
+    try:
+        module = _EXPORTS[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+    return getattr(importlib.import_module(f".{module}", __name__), name)

@@ -1,0 +1,93 @@
+"""CLI for the program invariant analyzer (docs/analysis.md).
+
+    python -m repro.analysis --all                 # every program + schedules
+    python -m repro.analysis --program simA.resident
+    python -m repro.analysis --fixture densify     # exit 1 = fixture tripped
+    python -m repro.analysis --list
+
+Exit codes: `--all` / `--program` exit 1 on any violation (CI gate);
+`--fixture` exits 1 when the broken fixture trips its detector — so CI
+asserts `! python -m repro.analysis --fixture X` for each fixture.
+
+XLA_FLAGS is set BEFORE jax is imported (the only moment host device
+count can be chosen — the dryrun.py precedent), defaulting to 13 host
+devices so the Regime B programs get a real client axis; imports below
+argv handling are therefore deliberately late (noqa: E402 via ruff
+per-file-ignores).
+"""
+import argparse
+import os
+import sys
+from typing import List, Optional
+
+
+def _parse(argv: List[str]) -> argparse.Namespace:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="jaxpr/HLO lint over every registered jitted program")
+    g = p.add_mutually_exclusive_group(required=True)
+    g.add_argument("--all", action="store_true",
+                   help="lint every registered program + schedule kinds")
+    g.add_argument("--program", metavar="NAME",
+                   help="lint one registered program")
+    g.add_argument("--fixture", metavar="NAME",
+                   help="run a deliberately-broken fixture (exit 1 = trip)")
+    g.add_argument("--list", action="store_true",
+                   help="list registered programs and fixtures")
+    p.add_argument("--devices", type=int, default=13,
+                   help="host device count to force if XLA_FLAGS is unset "
+                        "(default 13, matching SIM_M)")
+    return p.parse_args(argv)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ns = _parse(sys.argv[1:] if argv is None else argv)
+    if "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={ns.devices}")
+
+    from repro.analysis import detectors, fixtures, programs
+
+    if ns.list:
+        print("programs:")
+        for name in programs.PROGRAMS:
+            print(f"  {name}")
+        print("fixtures (each must exit 1):")
+        for name in fixtures.FIXTURES:
+            print(f"  {name}")
+        return 0
+
+    if ns.fixture:
+        rows, viols = fixtures.run_fixture(ns.fixture)
+        print(detectors.render_report(rows, [], viols), end="")
+        if viols:
+            print(f"fixture '{ns.fixture}': detector tripped as intended")
+            return 1
+        print(f"fixture '{ns.fixture}': detector DID NOT trip "
+              f"(the analyzer lost this check)")
+        return 0
+
+    names = tuple(programs.PROGRAMS) if ns.all else (ns.program,)
+    if not ns.all and ns.program not in programs.PROGRAMS:
+        print(f"unknown program '{ns.program}' "
+              f"(--list shows the registry)", file=sys.stderr)
+        return 2
+    rows, viols = [], []
+    for name in names:
+        row, v = detectors.run_program(programs.PROGRAMS[name]())
+        rows.append(row)
+        viols += v
+    srows = []
+    if ns.all:
+        srows, sviols = detectors.check_schedules()
+        viols += sviols
+    print(detectors.render_report(rows, srows, viols), end="")
+    if viols:
+        print(f"{len(viols)} violation(s)")
+        return 1
+    print("all invariants hold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

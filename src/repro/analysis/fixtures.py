@@ -1,0 +1,131 @@
+"""Deliberately-broken fixture programs — one per detector.
+
+Each fixture is a small program carrying exactly one of the defects the
+analyzer exists to catch; `python -m repro.analysis --fixture NAME` must
+exit 1 on every one of them (wired into CI as negative tests), and
+`tests/test_analysis.py` asserts each trips the detector it targets.
+These are the proof that the detectors detect — a lint pass that has
+never seen a violation is indistinguishable from one that cannot see
+them.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import topology
+
+from .detectors import Violation, check_topology_stochastic, run_program
+from .programs import N_ROUNDS, ProgramInstance
+
+_M = 13          # same prime as the real simulation programs
+
+
+def broken_densify() -> ProgramInstance:
+    """A 'mix' that materializes the dense (m, m) matrix inside the
+    compiled program — the exact O(m^2) blow-up the sparse engine
+    avoids.  Only the densify detector should trip: the state is
+    donated and re-emitted, nothing retraces, nothing touches host."""
+    P = topology.TopologySchedule.random(_M, 3, seed=3).at(0)
+    b = jnp.ones((_M, 4))
+
+    def fn(U, P, b):
+        dense = P.dense()                 # (m, m) intermediate: the bug
+        return dense @ U + 0.0 * b, jnp.sum(U)
+
+    return ProgramInstance(
+        name="broken.densify", fn=fn,
+        round_args=((P, b),) * N_ROUNDS,
+        fresh_state=lambda: jnp.ones((_M, 4)),
+        donate=(0,), m=_M)
+
+
+def broken_donation() -> ProgramInstance:
+    """Donates a f32 arg-0 but only ever emits a bf16 projection of it —
+    XLA cannot alias across dtypes, silently drops the donation (a
+    warning at most), and the 'resident' buffer quietly doubles."""
+    def fn(U, b):
+        out = (U + b).astype(jnp.bfloat16)    # dtype change kills aliasing
+        return out, jnp.sum(b)
+
+    return ProgramInstance(
+        name="broken.donation", fn=fn,
+        round_args=((jnp.ones((_M, 4)),),) * N_ROUNDS,
+        fresh_state=lambda: jnp.ones((_M, 4)),
+        donate=(0,), m=_M)
+
+# the donation fixture's carry changes dtype, so later rounds would need
+# a different trace; every detector but `donation` skips it (see FIXTURES)
+
+
+def broken_retrace() -> ProgramInstance:
+    """The PR 1 bug shape: the round counter passed as a static python
+    int, so every round is a fresh trace + compile."""
+    def fn(U, t):
+        return U * (0.99 ** t), jnp.sum(U)
+
+    return ProgramInstance(
+        name="broken.retrace", fn=fn,
+        round_args=tuple(((t,)) for t in range(N_ROUNDS)),
+        fresh_state=lambda: jnp.ones((_M, 4)),
+        donate=(0,), m=_M,
+        jit_kwargs=dict(static_argnums=(1,)))
+
+
+def broken_hostsync() -> ProgramInstance:
+    """Feeds a raw numpy batch every round — each dispatch re-uploads it
+    host-to-device, the implicit transfer `transfer_guard('disallow')`
+    exists to catch (a real resident loop keeps batches committed)."""
+    def fn(U, b):
+        return U + jnp.asarray(b), jnp.sum(U)
+
+    return ProgramInstance(
+        name="broken.hostsync", fn=fn,
+        round_args=((np.ones((_M, 4), np.float32),),) * N_ROUNDS,
+        fresh_state=lambda: jnp.ones((_M, 4)),
+        donate=(0,), m=_M)
+
+
+def broken_stochastic_topology() -> topology.SparseTopology:
+    """A hand-built neighbor table whose rows sum to 0.6 — mass leaks on
+    every fire, the defect the stochasticity checker guards against."""
+    sched = topology.TopologySchedule.random(_M, 3, seed=3)
+    P = sched.at(0)
+    return P._replace(w=P.w * 0.6)
+
+
+# fixture name -> (builder, detectors expected to trip)
+FIXTURES: Dict[str, Tuple[Callable[[], Any], Tuple[str, ...]]] = {
+    "densify": (broken_densify, ("densify",)),
+    "donation": (broken_donation, ("donation",)),
+    "retrace": (broken_retrace, ("retrace",)),
+    "hostsync": (broken_hostsync, ("hostsync",)),
+    "stochastic": (broken_stochastic_topology, ("stochastic",)),
+}
+
+
+def run_fixture(name: str) -> Tuple[List[dict], List[Violation]]:
+    """Run the full detector battery over one broken fixture.  Returns
+    (report rows, violations); the CLI exits 1 iff violations is empty —
+    for fixtures, NOT tripping is the failure."""
+    builder, _ = FIXTURES[name]
+    built = builder()
+    if isinstance(built, topology.SparseTopology):
+        msgs = check_topology_stochastic(built, f"fixture:{name}")
+        row = {"program": f"broken.{name}", "m": built.idx.shape[0],
+               "stochastic": "FAIL" if msgs else "ok"}
+        return [row], [Violation(f"broken.{name}", "stochastic", m)
+                       for m in msgs]
+    if name == "donation":
+        # its carry changes dtype across rounds; only the (single-round)
+        # donation check is meaningful
+        from .detectors import check_donation
+        msgs = check_donation(built)
+        row = {"program": built.name, "m": built.m,
+               "donation": "FAIL" if msgs else "ok"}
+        return [row], [Violation(built.name, "donation", m) for m in msgs]
+    row, viols = run_program(built)
+    return [row], viols

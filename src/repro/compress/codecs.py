@@ -31,7 +31,8 @@ decoded rows at all.
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Protocol, runtime_checkable
+from typing import (Any, Callable, Dict, NamedTuple, Optional, Protocol,
+                    runtime_checkable)
 
 import jax
 import jax.numpy as jnp
@@ -68,7 +69,7 @@ class Codec(Protocol):
 MU_BYTES = 4          # the push-sum weight rides every payload, f32
 
 
-def index_dtype(d: int):
+def index_dtype(d: int) -> Any:
     """Wire dtype of sparse column ids: uint16 covers d <= 65535 (every
     simulation-scale buffer); int32 beyond."""
     return jnp.uint16 if d <= 0xFFFF else jnp.int32
@@ -90,15 +91,16 @@ class IdentityCodec:
     seed: int = 0
     exact = True
 
-    def encode(self, rows, key=None):
+    def encode(self, rows: jnp.ndarray,
+               key: Optional[jnp.ndarray] = None) -> Payload:
         del key
         return Payload(rows)
 
-    def decode(self, payload, d):
+    def decode(self, payload: Payload, d: int) -> jnp.ndarray:
         del d
         return payload.values
 
-    def residual(self, rows, payload):
+    def residual(self, rows: jnp.ndarray, payload: Payload) -> jnp.ndarray:
         del payload
         return jnp.zeros_like(rows, jnp.float32)
 
@@ -109,7 +111,8 @@ class IdentityCodec:
 # ---------------------------------------------------------------------------
 # sparsification: topk / randk
 # ---------------------------------------------------------------------------
-def _scatter_values(values, indices, d):
+def _scatter_values(values: jnp.ndarray, indices: Any,
+                    d: int) -> jnp.ndarray:
     m = values.shape[0]
     rows = jnp.arange(m)[:, None]
     return jnp.zeros((m, d), jnp.float32).at[
@@ -117,7 +120,7 @@ def _scatter_values(values, indices, d):
         values.astype(jnp.float32), mode="drop")
 
 
-def _scatter_zero(x, indices):
+def _scatter_zero(x: jnp.ndarray, indices: Any) -> jnp.ndarray:
     m = x.shape[0]
     rows = jnp.arange(m)[:, None]
     return x.astype(jnp.float32).at[
@@ -130,7 +133,7 @@ class _SparseCodec:
     seed: int = 0
     exact = False
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if not 0.0 < self.ratio <= 1.0:
             raise ValueError(f"sparsifier ratio must be in (0, 1], got "
                              f"{self.ratio}")
@@ -138,10 +141,10 @@ class _SparseCodec:
     def k_of(self, d: int) -> int:
         return max(1, int(d * self.ratio))
 
-    def decode(self, payload, d):
+    def decode(self, payload: Payload, d: int) -> jnp.ndarray:
         return _scatter_values(payload.values, payload.indices, d)
 
-    def residual(self, rows, payload):
+    def residual(self, rows: jnp.ndarray, payload: Payload) -> jnp.ndarray:
         """x - decode(encode(x)) without the dense decode: the kept entries
         carry their exact values (distinct indices), so the residual is x
         with those entries zeroed."""
@@ -155,7 +158,8 @@ class _SparseCodec:
 class TopKCodec(_SparseCodec):
     """Keep the K = ratio*d largest-|x| entries per row (deterministic)."""
 
-    def encode(self, rows, key=None):
+    def encode(self, rows: jnp.ndarray,
+               key: Optional[jnp.ndarray] = None) -> Payload:
         del key
         x = rows.astype(jnp.float32)
         d = x.shape[1]
@@ -169,7 +173,8 @@ class RandKCodec(_SparseCodec):
     """Keep K uniformly-random entries per row (fresh per key — the round
     or tick index folds into the key at the call site)."""
 
-    def encode(self, rows, key=None):
+    def encode(self, rows: jnp.ndarray,
+               key: Optional[jnp.ndarray] = None) -> Payload:
         if key is None:
             raise ValueError("randk sampling needs a PRNGKey")
         x = rows.astype(jnp.float32)
@@ -194,7 +199,7 @@ class QSGDCodec:
     seed: int = 0
     exact = False
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.bits not in (4, 8):
             raise ValueError(f"qsgd bits must be 4 or 8, got {self.bits}")
 
@@ -202,7 +207,8 @@ class QSGDCodec:
     def levels(self) -> int:
         return 2 ** (self.bits - 1) - 1          # 7 or 127
 
-    def encode(self, rows, key=None):
+    def encode(self, rows: jnp.ndarray,
+               key: Optional[jnp.ndarray] = None) -> Payload:
         x = rows.astype(jnp.float32)
         m, d = x.shape
         scale = jnp.max(jnp.abs(x), axis=1, keepdims=True)      # (m, 1)
@@ -221,7 +227,7 @@ class QSGDCodec:
         packed = q4[:, 0::2] | (q4[:, 1::2] << 4)
         return Payload(packed, None, scale)
 
-    def decode(self, payload, d):
+    def decode(self, payload: Payload, d: int) -> jnp.ndarray:
         scale = payload.scale
         if self.bits == 8:
             q = payload.values.astype(jnp.float32)
@@ -235,7 +241,7 @@ class QSGDCodec:
         safe = jnp.where(scale > 0, scale, 1.0)
         return jnp.where(scale > 0, q * safe / self.levels, 0.0)
 
-    def residual(self, rows, payload):
+    def residual(self, rows: jnp.ndarray, payload: Payload) -> jnp.ndarray:
         return rows.astype(jnp.float32) - self.decode(payload,
                                                       rows.shape[1])
 
@@ -253,7 +259,7 @@ KINDS = ("identity", "topk", "randk", "qsgd")
 # string -> factory registry: every name resolver (AlgoSpec, SimConfig,
 # train.py, the serve/bench CLIs) funnels through this one table instead
 # of growing its own if-ladder (repro.spec)
-_REGISTRY = {
+_REGISTRY: Dict[str, Callable[[float, int, int], "Codec"]] = {
     "identity": lambda ratio, bits, seed: IdentityCodec(seed=seed),
     "topk": lambda ratio, bits, seed: TopKCodec(ratio=ratio, seed=seed),
     "randk": lambda ratio, bits, seed: RandKCodec(ratio=ratio, seed=seed),
@@ -262,8 +268,8 @@ _REGISTRY = {
 assert tuple(_REGISTRY) == KINDS
 
 
-def get_codec(kind, *, ratio: float = 1.0 / 16.0, bits: int = 4,
-              seed: int = 0):
+def get_codec(kind: Optional[str], *, ratio: float = 1.0 / 16.0,
+              bits: int = 4, seed: int = 0) -> "Optional[Codec]":
     """The codec registry: kind string -> codec instance; None passes
     through (the uncompressed path), unknown kinds raise with the known
     names."""
@@ -277,7 +283,7 @@ def get_codec(kind, *, ratio: float = 1.0 / 16.0, bits: int = 4,
 
 
 def make_codec(kind: str, *, ratio: float = 1.0 / 16.0, bits: int = 4,
-               seed: int = 0):
+               seed: int = 0) -> "Codec":
     """Historical constructor name; `get_codec` is the registry form
     (kind must be a known string here — None is not a codec)."""
     if kind is None:

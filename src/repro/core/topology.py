@@ -69,7 +69,10 @@ class SparseTopology(NamedTuple):
 
     def dense(self) -> jnp.ndarray:
         """Materialize the (m, m) row-stochastic matrix (diagnostics only —
-        the gossip hot path never calls this)."""
+        the gossip hot path never calls this).  Refuses above MAX_DENSE_M:
+        the output IS the O(m^2) table every other guard exists to keep
+        off the allocator."""
+        _check_dense_degree(self.idx.shape[0], "SparseTopology.dense()")
         m = self.idx.shape[0]
         rows = jnp.arange(m)[:, None]
         return jnp.zeros((m, m), self.w.dtype).at[rows, self.idx].add(self.w)
@@ -86,9 +89,12 @@ class SparseTopology(NamedTuple):
 def from_dense(P, k: int | None = None) -> SparseTopology:
     """Host-side conversion of a dense row-stochastic matrix.  k defaults to
     the maximum number of nonzeros in any row; rows with fewer edges are
-    padded with (self, 0)."""
+    padded with (self, 0).  Guarded: the argsort below works on the full
+    (m, m) matrix, so above MAX_DENSE_M this path would allocate the very
+    table the sparse representation exists to avoid."""
     Pn = np.asarray(P, np.float32)
     m = Pn.shape[0]
+    _check_dense_degree(m, "from_dense (dense host-side conversion)")
     nnz = int((Pn > 0).sum(1).max()) if m else 0
     k = max(nnz, 1) if k is None else k
     if nnz > k:
@@ -343,6 +349,10 @@ def induced_subgraph(P: SparseTopology, active,
     if renorm not in ("row", "col"):
         raise ValueError(f"renorm must be 'row' or 'col'; got {renorm!r}")
     m, k = P.idx.shape
+    # a dense-width input (k ~ m, e.g. a giant from_dense table that
+    # slipped past its own guard via monkeypatching) would make the
+    # induced table O(n*m) — same guard, keyed on the inherited width
+    _check_dense_degree(k, "induced_subgraph of a dense-width (k = m) table")
     active = jnp.asarray(active, jnp.int32)
     n = active.shape[0]
     pos = jnp.full((m,), -1, jnp.int32).at[active].set(

@@ -24,7 +24,7 @@ from __future__ import annotations
 
 import json
 import math
-from typing import Iterable, Iterator, Optional, TextIO, Union
+from typing import Any, Dict, Iterable, Iterator, Optional, TextIO, Union
 
 # v2 (PR 9): adds the "graph" and "alert" kinds.  v1 records remain
 # valid under v2 readers (no v1 field changed meaning); v2 records are
@@ -47,7 +47,7 @@ _REQUIRED = {
 _KINDS = tuple(_REQUIRED)
 
 
-def _clean(v):
+def _clean(v: Any) -> Any:
     """JSON-able scalar: unwrap 0-d arrays / numpy scalars, map the
     non-JSON floats (nan/inf) to None."""
     if hasattr(v, "item"):
@@ -58,13 +58,13 @@ def _clean(v):
 
 
 def make_record(kind: str, *, run: str = "", algo: str = "",
-                step: int = 0, **gauges) -> dict:
+                step: int = 0, **gauges: Any) -> Dict[str, Any]:
     """Build a schema-stamped record.  `step` is the round index, tick
     index, or serve-call sequence number.  Gauges may be python scalars,
     numpy scalars, or 0-d jax arrays (unwrapped here — callers jnp-side
     should still block/`item()` OUTSIDE the jitted region)."""
-    rec = {"schema": SCHEMA_VERSION, "kind": kind, "run": run,
-           "algo": algo, "step": int(step)}
+    rec: Dict[str, Any] = {"schema": SCHEMA_VERSION, "kind": kind,
+                           "run": run, "algo": algo, "step": int(step)}
     for k, v in gauges.items():
         if v is None:
             continue
@@ -72,27 +72,28 @@ def make_record(kind: str, *, run: str = "", algo: str = "",
     return rec
 
 
-def round_record(**kw) -> dict:
+def round_record(**kw: Any) -> Dict[str, Any]:
     return make_record("round", **kw)
 
 
-def tick_record(**kw) -> dict:
+def tick_record(**kw: Any) -> Dict[str, Any]:
     return make_record("tick", **kw)
 
 
-def serve_record(**kw) -> dict:
+def serve_record(**kw: Any) -> Dict[str, Any]:
     return make_record("serve", **kw)
 
 
-def graph_record(**kw) -> dict:
+def graph_record(**kw: Any) -> Dict[str, Any]:
     return make_record("graph", **kw)
 
 
-def alert_record(**kw) -> dict:
+def alert_record(**kw: Any) -> Dict[str, Any]:
     return make_record("alert", **kw)
 
 
-def validate(rec: dict, max_schema: int = SCHEMA_VERSION) -> None:
+def validate(rec: Dict[str, Any],
+             max_schema: int = SCHEMA_VERSION) -> None:
     """Raise ValueError naming the first problem; returns None when the
     record is well-formed.  A record from a NEWER schema than the reader
     supports is an error — silent misreads are how metric streams rot."""
@@ -121,7 +122,7 @@ def validate(rec: dict, max_schema: int = SCHEMA_VERSION) -> None:
             raise ValueError(f"gauge {k!r} is not a JSON scalar: {v!r}")
 
 
-def render(rec: dict) -> str:
+def render(rec: Dict[str, Any]) -> str:
     """Human-readable one-liner — the form train.py prints per round and
     report prints per row.  Stable field order: identity, the learning
     signal, then whichever gauges the record carries."""
@@ -144,12 +145,12 @@ def render(rec: dict) -> str:
     return " ".join(bits)
 
 
-def dumps(rec: dict) -> str:
+def dumps(rec: Dict[str, Any]) -> str:
     return json.dumps(rec, sort_keys=True)
 
 
 def load_jsonl(fp: Union[str, TextIO],
-               max_schema: Optional[int] = None) -> Iterator[dict]:
+               max_schema: Optional[int] = None) -> Iterator[Dict[str, Any]]:
     """Yield validated records from a JSONL file (path or handle).
     Blank lines are skipped; malformed lines raise with their line
     number so CI failures point at the offending record."""
@@ -171,7 +172,7 @@ def load_jsonl(fp: Union[str, TextIO],
             fh.close()
 
 
-def schema_of(records: Iterable[dict]) -> int:
+def schema_of(records: Iterable[Dict[str, Any]]) -> int:
     """Highest schema version present in a record stream (0 if empty) —
     what check_regression reads off fresh benchmark artifacts."""
     return max((r.get("schema", 0) for r in records), default=0)

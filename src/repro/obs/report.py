@@ -60,6 +60,11 @@ def _table(rows: List[dict], cols: List[str], title: str) -> str:
     return f"\n== {title} ({len(rows)} records) ==\n{head}\n{body}\n"
 
 
+# public alias: the analysis report (repro.analysis) renders through the
+# same fixed-width table as the obs summaries
+table = _table
+
+
 def summarize_rounds(recs: List[dict], kind: str) -> str:
     cols = ["step", "loss", "acc", "vtime", "consensus_gap_mean",
             "consensus_gap_max", "mass_total", "ef_ratio", "grad_norm",

@@ -24,10 +24,13 @@ TID251 lint gate bans them inside src/).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional
+from typing import TYPE_CHECKING, Any, Optional
 
 from repro import compress
 from repro.core import sampling, topology
+
+if TYPE_CHECKING:
+    from repro.compress.codecs import Codec
 
 GOSSIP_MODES = ("dense", "sparse", "pallas", "ppermute")
 # algorithms whose mixing must be symmetric (no push-sum de-bias):
@@ -62,7 +65,7 @@ class AlgoSpec:
     # resident buffer the round gauges read.
     graph_every: int = 0
 
-    def __post_init__(self):
+    def __post_init__(self) -> None:
         if self.topology not in topology.TopologySchedule.KINDS:
             raise ValueError(
                 f"topology {self.topology!r}; known: "
@@ -136,19 +139,20 @@ class AlgoSpec:
         return topology.get_schedule(self.topology, m, self.n_neighbors,
                                      self.seed)
 
-    def make_codec(self):
+    def make_codec(self) -> "Optional[Codec]":
         """The wire codec instance, or None (uncompressed)."""
         return compress.get_codec(self.codec, ratio=self.codec_ratio,
                                   bits=self.codec_bits, seed=self.seed)
 
-    def sampler(self, m: int, profile=None):
+    def sampler(self, m: int,
+                profile: Any = None) -> Optional[sampling.ParticipationSampler]:
         """The ParticipationSampler, or None for full participation."""
         return sampling.get_sampler(self.participation, m,
                                     self.participation_frac, self.seed,
                                     profile)
 
 
-def make_algo_spec(algo: str = "dfedpgp", **kw) -> AlgoSpec:
+def make_algo_spec(algo: str = "dfedpgp", **kw: Any) -> AlgoSpec:
     """THE factory: every entrypoint builds its AlgoSpec here.  Accepts
     the historical Regime B alias gossip="matrix" (the mixing-matrix
     contraction — i.e. the sparse engine) and normalizes it, so CLI flags

@@ -1,0 +1,139 @@
+"""Program invariant analyzer: detectors, fixtures, and the registry.
+
+The sentinel tests run the real detectors over the shipped simulation-
+scale program builders (the Regime B builders are exercised too — on the
+single test device they degrade to m = 1, where the densify scan is
+vacuous but donation/retrace/host-sync still bite, and the CI analysis
+job re-runs them at 13 forced host devices).  The fixture tests are the
+negative space: a detector that has never tripped is indistinguishable
+from one that cannot trip.
+"""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import detectors, fixtures, programs
+from repro.core import topology
+
+SIM_PROGRAMS = ["simA.resident", "simA.sampled", "async.tick", "serve.cnn"]
+
+
+# ---------------------------------------------------------------------------
+# the shipped builders pass every detector
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", SIM_PROGRAMS)
+def test_sim_programs_clean(name):
+    row, viols = detectors.run_program(programs.PROGRAMS[name]())
+    assert not viols, viols
+    assert row["program"] == name
+    assert "FAIL" not in row.values()
+
+
+def test_regime_b_resident_clean_on_test_device():
+    row, viols = detectors.run_program(programs.PROGRAMS["regimeB.resident"]())
+    assert not viols, viols
+    assert row["donation"] == "ok"     # the donated flat state aliases
+
+
+def test_retrace_sentinel_passes_shipped_builders():
+    # the sentinel in isolation: exactly one trace across N_ROUNDS
+    inst = programs.PROGRAMS["simA.resident"]()
+    assert detectors.check_retrace(inst) == []
+
+
+def test_schedule_kinds_all_stochastic():
+    srows, viols = detectors.check_schedules()
+    assert not viols, viols
+    assert {r["kind"] for r in srows} == set(
+        topology.TopologySchedule.KINDS)
+
+
+# ---------------------------------------------------------------------------
+# each broken fixture trips the detector it targets
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", list(fixtures.FIXTURES))
+def test_fixture_trips_its_detector(name):
+    _, expected = fixtures.FIXTURES[name]
+    _, viols = fixtures.run_fixture(name)
+    assert viols, f"fixture {name} did not trip anything"
+    tripped = {v.detector for v in viols}
+    assert set(expected) <= tripped, (expected, viols)
+
+
+def test_retrace_fixture_caught_with_count():
+    # satellite: the python-scalar-closure fixture retraces once per round
+    _, viols = fixtures.run_fixture("retrace")
+    assert any(v.detector == "retrace" and "3 traces" in v.message
+               for v in viols), viols
+
+
+def test_broken_stochastic_mass_leak_message():
+    P = fixtures.broken_stochastic_topology()
+    msgs = detectors.check_topology_stochastic(P, "leak")
+    assert msgs and "row-stochastic" in msgs[0]
+
+
+# ---------------------------------------------------------------------------
+# detector mechanics
+# ---------------------------------------------------------------------------
+def test_densify_allowlist_by_named_scope():
+    m = 13
+    P = topology.TopologySchedule.random(m, 3, seed=3).at(0)
+
+    def fn(U, P):
+        with jax.named_scope("diag_dense"):
+            dense = P.dense()
+        return dense @ U, jnp.sum(U)
+
+    def inst(allow):
+        return programs.ProgramInstance(
+            name="t", fn=fn, round_args=((P,),) * programs.N_ROUNDS,
+            fresh_state=lambda: jnp.ones((m, 4)), donate=(0,), m=m,
+            allow_dense=allow)
+
+    assert detectors.check_densify(inst(()))            # flagged bare...
+    assert not detectors.check_densify(inst(("diag_dense",)))  # ...waived
+
+
+def test_densify_walks_sub_jaxprs():
+    # an (m, m) intermediate hidden inside a scan body is still found
+    m = 13
+
+    def fn(U):
+        def body(c, _):
+            return c + jnp.ones((m, m)) @ c, None
+        out, _ = jax.lax.scan(body, U, None, length=2)
+        return out, jnp.sum(out)
+
+    inst = programs.ProgramInstance(
+        name="t", fn=fn, round_args=((),) * programs.N_ROUNDS,
+        fresh_state=lambda: jnp.ones((m, m)), donate=(0,), m=m)
+    assert detectors.check_densify(inst)
+
+
+def test_densify_vacuous_at_m_one():
+    inst = programs.ProgramInstance(
+        name="t", fn=lambda U: (U, jnp.sum(U)),
+        round_args=((),) * programs.N_ROUNDS,
+        fresh_state=lambda: jnp.ones((1, 1)), donate=(0,), m=1)
+    assert detectors.check_densify(inst) == []
+
+
+def test_donation_na_for_stateless_programs():
+    row, viols = detectors.run_program(programs.PROGRAMS["serve.cnn"]())
+    assert row["donation"] == "n/a"
+    assert not viols
+
+
+def test_run_all_api_shape():
+    # the pytest-facing aggregate over a subset (full --all is the CI job)
+    rows, srows, viols = detectors.run_all(names=("simA.resident",))
+    assert not viols
+    assert len(rows) == 1 and len(srows) == 5
+
+
+def test_report_renders_fail_rows():
+    rows = [{"program": "p", "m": 13, "densify": "FAIL"}]
+    v = [detectors.Violation("p", "densify", "boom")]
+    out = detectors.render_report(rows, [], v)
+    assert "FAIL" in out and "boom" in out and "program invariants" in out

@@ -204,3 +204,53 @@ def test_ops_dispatch_cpu_uses_ref():
     np.testing.assert_allclose(
         np.asarray(ops.pushsum_mix(P, U, force="pallas")),
         np.asarray(ref.pushsum_mix_ref(P, U)), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# loud-knob rule: every pallas-only knob raises off-pallas (ops.py)
+# ---------------------------------------------------------------------------
+def _knob_args():
+    """Minimal valid argument tuples for every ops entry point."""
+    key = jax.random.PRNGKey(7)
+    m, k, d, dd = 4, 2, 8, 6
+    P = jax.random.dirichlet(key, jnp.ones((m,)), (m,))
+    U = jax.random.normal(jax.random.fold_in(key, 1), (m, d))
+    idx = jnp.tile(jnp.arange(k, dtype=jnp.int32), (m, 1))
+    w = jnp.full((m, k), 1.0 / k)
+    vals = jax.random.normal(jax.random.fold_in(key, 2), (m, 3))
+    cols = jnp.tile(jnp.arange(3, dtype=jnp.int32), (m, 1))
+    uid = jnp.asarray([0, 2], jnp.int32)
+    H = jax.random.normal(jax.random.fold_in(key, 3), (2, dd))
+    W = jax.random.normal(jax.random.fold_in(key, 4), (m, dd, 3))
+    bias = jnp.zeros((m, 3))
+    qkv = jax.random.normal(jax.random.fold_in(key, 5), (1, 4, 1, 4))
+    ab = jax.random.uniform(jax.random.fold_in(key, 6), (1, 4, dd),
+                            minval=0.1, maxval=0.9)
+    return {
+        "pushsum_mix": (ops.pushsum_mix, (P, U), ("block_d",)),
+        "gossip_gather": (ops.gossip_gather, (idx, w, U),
+                          ("block_m", "block_d")),
+        "gossip_scatter": (ops.gossip_scatter, (uid, U[:2], U),
+                           ("block_m", "block_d")),
+        "topk_gather": (ops.topk_gather, (idx, w, vals, cols, d),
+                        ("block_m", "block_d")),
+        "head_gather_matmul": (ops.head_gather_matmul, (uid, H, W, bias),
+                               ("block_b", "block_n")),
+        "flash_attention": (ops.flash_attention, (qkv, qkv, qkv),
+                            ("bq", "bk")),
+        "rglru": (ops.rglru, (ab, ab), ("bs", "bw")),
+    }
+
+
+@pytest.mark.parametrize("op", ["pushsum_mix", "gossip_gather",
+                                "gossip_scatter", "topk_gather",
+                                "head_gather_matmul", "flash_attention",
+                                "rglru"])
+def test_every_pallas_knob_raises_off_pallas(op):
+    fn, base, knobs = _knob_args()[op]
+    # the bare ref dispatch works...
+    fn(*base, force="ref")
+    for knob in knobs:
+        # ...but any pallas-only knob on it raises, naming the knob
+        with pytest.raises(ValueError, match=knob):
+            fn(*base, force="ref", **{knob: 8})

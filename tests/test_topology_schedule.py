@@ -7,6 +7,7 @@ derivation for the ppermute path, and the sparse fully_connected form.
 import dataclasses
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -161,3 +162,61 @@ def test_schedule_window_strongly_connected():
     s = TopologySchedule.exponential(16)
     window = [s.at(t) for t in range(s.period)]
     assert topology.union_strongly_connected(window)
+
+
+# ---------------------------------------------------------------------------
+# dense-degree ceiling on every O(m^2) path (docs/scale.md)
+# ---------------------------------------------------------------------------
+def _tiny_ceiling(monkeypatch, cap=4):
+    monkeypatch.setattr(topology, "MAX_DENSE_M", cap)
+
+
+def test_dense_degree_guard_from_dense(monkeypatch):
+    _tiny_ceiling(monkeypatch)
+    with pytest.raises(ValueError, match="MAX_DENSE_M"):
+        topology.from_dense(np.eye(6, dtype=np.float32))
+
+
+def test_dense_degree_guard_dense_method(monkeypatch):
+    P = topology.ring(6)        # sparse table builds fine above the cap...
+    _tiny_ceiling(monkeypatch)
+    with pytest.raises(ValueError, match="MAX_DENSE_M"):
+        P.dense()               # ...materializing (m, m) does not
+
+
+def test_dense_degree_guard_densify_helper(monkeypatch):
+    _tiny_ceiling(monkeypatch)
+    with pytest.raises(ValueError, match="MAX_DENSE_M"):
+        topology.densify(topology.ring(6))
+
+
+def test_dense_degree_guard_fully_connected(monkeypatch):
+    _tiny_ceiling(monkeypatch)
+    with pytest.raises(ValueError, match="MAX_DENSE_M"):
+        topology.fully_connected(6)
+
+
+def test_dense_degree_guard_undirected(monkeypatch):
+    _tiny_ceiling(monkeypatch)
+    with pytest.raises(ValueError, match="MAX_DENSE_M"):
+        topology.undirected_random(jax.random.PRNGKey(0), 6, 2)
+
+
+def test_dense_degree_guard_induced_subgraph(monkeypatch):
+    # a dense-width (k = m) neighbor table: inducing over it walks the
+    # full O(m^2) table, so the same ceiling applies
+    P = topology.fully_connected(6)
+    _tiny_ceiling(monkeypatch)
+    act = jnp.asarray([0, 2, 4], jnp.int32)
+    with pytest.raises(ValueError, match="MAX_DENSE_M"):
+        topology.induced_subgraph(P, act, "row")
+
+
+def test_sparse_paths_unaffected_by_ceiling(monkeypatch):
+    _tiny_ceiling(monkeypatch)
+    # sparse-degree construction and induction stay open above the cap
+    P = topology.directed_random(jax.random.PRNGKey(0), 8, 2)
+    act = jnp.asarray([0, 3, 5], jnp.int32)
+    sub = topology.induced_subgraph(P, act, "row")
+    assert sub.idx.shape == (3, P.k)
+    np.testing.assert_allclose(np.asarray(sub.w.sum(1)), 1.0, atol=1e-5)
